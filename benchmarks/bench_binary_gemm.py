@@ -1,0 +1,61 @@
+"""Binary GEMM kernel benchmark: wall time on CPU (jnp packed path vs
+dense float matmul) and derived op/byte reductions for the TPU target.
+
+Note: the Pallas kernels run in interpret mode on CPU (Python-speed) —
+the *deployable* CPU realization is the same packed XNOR-popcount math via
+jnp (binary_matmul path='ref' uses XLA), so we time the jnp packed path.
+The derived columns are the hardware-independent facts: 32x weight bytes,
+word-op counts.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bitpack import pack_bits, packed_dot, packed_width
+from repro.kernels.ref import binary_matmul_ref
+
+
+def _time(fn, *args, iters=5) -> float:
+    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    m = n = 256
+    for k in (1024, 4096):
+        key = jax.random.PRNGKey(k)
+        x = jax.random.normal(key, (m, k), jnp.float32)
+        w = jax.random.normal(jax.random.fold_in(key, 1), (k, n))
+
+        dense = jax.jit(lambda x, w: x @ w)
+        us_dense = _time(dense, x, w)
+
+        xp = pack_bits(x)
+        wp = pack_bits(w.T)
+        packed = jax.jit(lambda a, b: packed_dot(a[:, None], b[None], k))
+        us_packed = _time(packed, xp, wp)
+
+        # correctness cross-check while we're here
+        want = np.asarray(binary_matmul_ref(x, w), np.int32)
+        got = np.asarray(packed(xp, wp))
+        assert (want == got).all()
+
+        rows.append((f"binary_gemm_k{k}_dense_f32", us_dense, "baseline"))
+        rows.append((f"binary_gemm_k{k}_xnor_popcount", us_packed,
+                     f"speedup={us_dense/us_packed:.2f}x"))
+        rows.append((f"binary_gemm_k{k}_weight_bytes_x", 0.0,
+                     f"{(k*4)/(packed_width(k)*4):.0f}"))
+        # ops: fp MACs vs word ops
+        rows.append((f"binary_gemm_k{k}_word_ops_reduction_x", 0.0,
+                     f"{k/packed_width(k):.0f}"))
+    return rows

@@ -1,0 +1,53 @@
+"""Paper Tables 1-2 + §4.1: energy model of fp32/fp16/BinaryConnect/BBP
+arithmetic for each experiment network, with the kernel-dedup factor."""
+from __future__ import annotations
+
+import time
+
+from repro.core.energy import conv_layer_energy, dense_layer_energy
+
+# paper CIFAR-10 CNN conv stack (cin, cout, k, h, w)
+CNN_CONVS = [
+    (3, 128, 3, 32, 32), (128, 128, 3, 32, 32),
+    (128, 256, 3, 16, 16), (256, 256, 3, 16, 16),
+    (256, 512, 3, 8, 8), (512, 512, 3, 8, 8),
+]
+CNN_FCS = [(1, 8192, 1024), (1, 1024, 1024), (1, 1024, 10)]
+MLP_LAYERS = [(1, 784, 1024), (1, 1024, 1024), (1, 1024, 1024), (1, 1024, 10)]
+
+
+def net_energy(mode: str, *, dedup: float = 1.0, net: str = "cnn") -> float:
+    total = 0.0
+    if net == "cnn":
+        for cin, cout, k, h, w in CNN_CONVS:
+            total += conv_layer_energy(cin, cout, k, h, w, mode=mode,
+                                       unique_kernel_fraction=dedup).total_pj()
+        for m, kk, n in CNN_FCS:
+            total += dense_layer_energy(m, kk, n, mode=mode).total_pj()
+    else:
+        for m, kk, n in MLP_LAYERS:
+            total += dense_layer_energy(m, kk, n, mode=mode).total_pj()
+    return total
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    for net in ("mlp", "cnn"):
+        t0 = time.perf_counter()
+        fp32 = net_energy("fp32", net=net)
+        fp16 = net_energy("fp16", net=net)
+        bc = net_energy("bc", net=net)
+        bbp = net_energy("bbp", net=net)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"energy_{net}_fp32_uJ", us, f"{fp32/1e6:.1f}"))
+        rows.append((f"energy_{net}_fp16_vs_bbp_x", us,
+                     f"{fp16/bbp:.0f}"))
+        rows.append((f"energy_{net}_fp32_vs_bbp_x", us,
+                     f"{fp32/bbp:.0f}"))
+        rows.append((f"energy_{net}_fp32_vs_bc_x", us, f"{fp32/bc:.1f}"))
+    # §4.2: 37% unique kernels => ~2.7x fewer XNOR-popcount ops
+    bbp_full = net_energy("bbp", net="cnn")
+    bbp_dedup = net_energy("bbp", net="cnn", dedup=0.37)
+    rows.append(("energy_cnn_bbp_dedup_x", 0.0,
+                 f"{bbp_full/bbp_dedup:.2f}"))
+    return rows

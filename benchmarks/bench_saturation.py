@@ -1,0 +1,24 @@
+"""Paper Fig. 4: weight saturation (fraction at the +-1 clipping edges)
+before vs after BBP training."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.binarize import saturation_fraction
+from benchmarks.bench_accuracy import train_mlp
+
+
+def run() -> list[tuple[str, float, str]]:
+    t0 = time.perf_counter()
+    _, params = train_mlp("bbp", steps=400)
+    us = (time.perf_counter() - t0) * 1e6
+    rows = []
+    sats = [float(saturation_fraction(l["w"], tol=1e-2))
+            for l in params["layers"]]
+    for i, s in enumerate(sats):
+        rows.append((f"fig4_layer{i}_saturation_pct", us, f"{100*s:.1f}"))
+    rows.append(("fig4_mean_saturation_pct", us,
+                 f"{100*float(np.mean(sats)):.1f}"))
+    return rows

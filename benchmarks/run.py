@@ -1,0 +1,36 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.
+
+  Table 1/2 (energy)      -> bench_energy
+  Table 3  (test error)   -> bench_accuracy
+  Fig. 1   (convergence)  -> bench_convergence
+  Fig. 2 / §4.2 (kernels) -> bench_kernel_dedup
+  Fig. 4   (saturation)   -> bench_saturation
+  binary GEMM kernel      -> bench_binary_gemm
+  roofline (dry-run)      -> src/repro/roofline/report.py (separate: needs
+                             the 512-device dryrun_results.jsonl)
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_accuracy, bench_binary_gemm, bench_convergence, bench_energy,
+        bench_kernel_dedup, bench_saturation,
+    )
+    mods = [bench_energy, bench_binary_gemm, bench_kernel_dedup,
+            bench_accuracy, bench_saturation, bench_convergence]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for mod in mods:
+        if only and only not in mod.__name__:
+            continue
+        for name, us, derived in mod.run():
+            print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Deployment path: freeze a binarized LM to the paper's 1-bit packed
+checkpoint format, restore it, and serve batched requests (prefill +
+greedy decode). Weights on disk cost 1 bit each — the paper's "reduce the
+memory requirement by 16-32x" claim, realized.
+
+  PYTHONPATH=src python examples/serve_binarized.py
+"""
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.smoke import smoke_config
+from repro.models import get_model
+from repro.serving.engine import Request, ServingEngine
+from repro.train.step import _CLIP_KEYS
+
+cfg = smoke_config("qwen2-72b")          # GQA + QKV-bias family, tiny
+model = get_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+
+with tempfile.TemporaryDirectory() as d:
+    mgr = CheckpointManager(d, async_save=False)
+    mgr.save(0, params, packed_binary=True, binary_keys=_CLIP_KEYS)
+    raw = sum(int(np.asarray(x).nbytes) for x in jax.tree.leaves(params))
+    disk = sum(os.path.getsize(os.path.join(r, f))
+               for r, _, fs in os.walk(d) for f in fs)
+    print(f"fp32 params: {raw/1e6:.2f} MB -> packed checkpoint "
+          f"{disk/1e6:.2f} MB ({raw/disk:.1f}x smaller)")
+    frozen = mgr.restore(0, params)
+
+# all projection weights are now exactly +-1: inference is pure XNOR+popcount
+wq = np.asarray(frozen["blocks"]["attn"]["wq"])
+assert set(np.unique(wq)) <= {-1.0, 1.0}
+print("restored projection weights are exactly {-1,+1}: True")
+
+eng = ServingEngine(cfg, frozen, max_len=48)
+rng = np.random.default_rng(0)
+reqs = [Request(prompt=rng.integers(0, cfg.vocab, 16, dtype=np.int32),
+                max_new_tokens=8) for _ in range(4)]
+outs = eng.generate(reqs)
+for i, o in enumerate(outs):
+    print(f"request {i}: generated {o.tolist()}")
+print("engine stats:", {k: round(v, 3) if isinstance(v, float) else v
+                        for k, v in eng.stats.items()})

@@ -1,0 +1,132 @@
+"""Checkpointing: sharded-save / elastic-restore, async writer, and the
+paper's 1-bit packed format for frozen binary weights.
+
+Layout per step:  <dir>/step_<n>/
+    manifest.json         tree structure, shapes, dtypes, packing flags
+    arrays.npz            one entry per leaf (full logical arrays)
+Atomic: written to step_<n>.tmp then renamed. restore() reshards onto
+whatever mesh/shardings the caller provides — elastic scaling across
+restarts is a device_put away because logical arrays are stored whole.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+from pathlib import Path
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bitpack import pack_bits, unpack_bits
+
+
+def _flatten(tree) -> tuple[list, Any]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def _leaf_names(tree) -> list[str]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path) for path, _ in flat]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, keep: int = 3,
+                 async_save: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree, *, packed_binary: bool = False,
+             binary_keys: set[str] | None = None) -> None:
+        """packed_binary: store sign bits (1 bit/weight) for leaves whose
+        path contains a binary-weight key — the paper's deployment format."""
+        leaves, treedef = _flatten(tree)
+        names = _leaf_names(tree)
+        host = [np.asarray(jax.device_get(x)) for x in leaves]
+        if self._thread is not None:
+            self._thread.join()  # one outstanding async save max
+
+        def write():
+            self._write(step, host, names, treedef, packed_binary,
+                        binary_keys or set())
+            self._gc()
+
+        if self.async_save:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        else:
+            write()
+
+    def _write(self, step, host, names, treedef, packed_binary, binary_keys):
+        tmp = self.dir / f"step_{step}.tmp"
+        final = self.dir / f"step_{step}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        arrays, manifest = {}, {"step": step, "leaves": []}
+        for i, (name, arr) in enumerate(zip(names, host)):
+            key = f"leaf_{i}"
+            packed = packed_binary and arr.ndim >= 2 and any(
+                bk in name for bk in binary_keys)
+            if packed:
+                arrays[key] = np.asarray(pack_bits(jnp.asarray(arr)))
+            else:
+                arrays[key] = arr
+            manifest["leaves"].append({
+                "name": name, "key": key, "shape": list(arr.shape),
+                "dtype": str(arr.dtype), "packed": bool(packed),
+            })
+        np.savez(tmp / "arrays.npz", **arrays)
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        return sorted(int(p.name.split("_")[1]) for p in self.dir.glob("step_*")
+                      if not p.name.endswith(".tmp"))
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like, shardings=None):
+        """Restore into the structure of `like` (a pytree of arrays or
+        ShapeDtypeStructs). `shardings` (same structure) reshards onto the
+        current mesh — elastic restore after scaling up/down."""
+        path = self.dir / f"step_{step}"
+        manifest = json.loads((path / "manifest.json").read_text())
+        data = np.load(path / "arrays.npz")
+        _, treedef = _flatten(like)
+        leaves = []
+        for entry in manifest["leaves"]:
+            arr = data[entry["key"]]
+            if entry["packed"]:
+                arr = np.asarray(unpack_bits(jnp.asarray(arr),
+                                             entry["shape"][-1]))
+                arr = arr.reshape(entry["shape"]).astype(entry["dtype"])
+            leaves.append(arr)
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), tree, shardings)
+        return tree

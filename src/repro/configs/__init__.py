@@ -1,0 +1,20 @@
+"""Config registry: importing this package registers every assigned arch."""
+from repro.configs.base import (
+    ModelConfig, ShapeSpec, SHAPES, get_config, list_archs, register,
+)
+
+# assigned architectures (10) — importing registers them
+from repro.configs import (  # noqa: F401
+    nemotron_4_15b, phi3_medium_14b, qwen2_72b, deepseek_67b,
+    llama4_scout_17b_a16e, dbrx_132b, musicgen_large, recurrentgemma_2b,
+    llama_3_2_vision_11b, falcon_mamba_7b,
+)
+from repro.configs.bnn_paper import (
+    PaperNetConfig, BNN_MNIST, BNN_CIFAR10, BNN_SVHN, PAPER_CONFIGS,
+)
+
+__all__ = [
+    "ModelConfig", "ShapeSpec", "SHAPES", "get_config", "list_archs",
+    "register", "PaperNetConfig", "BNN_MNIST", "BNN_CIFAR10", "BNN_SVHN",
+    "PAPER_CONFIGS",
+]

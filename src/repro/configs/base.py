@@ -1,0 +1,141 @@
+"""Config system: ModelConfig dataclass, input-shape sets, registry."""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    """One assigned input-shape cell."""
+    name: str                 # train_4k / prefill_32k / decode_32k / long_500k
+    kind: str                 # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str               # dense | moe | audio | hybrid | vlm | ssm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 128
+    mlp: str = "swiglu"       # swiglu | geglu | sq_relu | gelu
+    norm: str = "rmsnorm"     # rmsnorm | layernorm
+    pos: str = "rope"         # rope | sinusoidal
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # VLM cross-attention (llama-3.2-vision): groups of `xattn_group` layers,
+    # first layer of each group carries an extra cross-attn sublayer
+    xattn_group: int = 0
+    n_img_tokens: int = 0
+    d_vision: int = 0
+    # hybrid (recurrentgemma)
+    block_pattern: tuple[str, ...] = ()   # e.g. ("rec", "rec", "attn")
+    local_window: int = 0
+    lru_width: int = 0
+    # ssm (falcon-mamba)
+    ssm_state: int = 0
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0
+    # quantization — the paper's technique on all projections
+    quant: str = "bbp_det"    # none | bc | bbp | bbp_det
+    # numerics
+    dtype: str = "bfloat16"
+    remat: bool = True
+    # which shape cells apply (long_500k only for sub-quadratic archs)
+    shapes: tuple[str, ...] = ("train_4k", "prefill_32k", "decode_32k")
+    # attention chunking for the blockwise kernel
+    attn_chunk: int = 512
+    source: str = ""
+
+    @property
+    def activation_dtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    def scaled(self, **overrides) -> "ModelConfig":
+        return dataclasses.replace(self, **overrides)
+
+    def n_params(self) -> int:
+        """Approximate parameter count (embeddings + blocks)."""
+        d, f, v, l = self.d_model, self.d_ff, self.vocab, self.n_layers
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        if self.family == "ssm":
+            di = self.expand * d
+            dtr = self.dt_rank or max(1, d // 16)
+            per = (d * 2 * di + self.d_conv * di + di * (dtr + 2 * self.ssm_state)
+                   + dtr * di + di * self.ssm_state + di + di * d)
+            return emb + l * per
+        attn = d * (self.n_heads + 2 * self.n_kv_heads) * self.head_dim \
+            + self.n_heads * self.head_dim * d
+        ffn_mult = 3 if self.mlp in ("swiglu", "geglu") else 2
+        if self.n_experts:
+            ff = self.n_experts * ffn_mult * d * f + d * self.n_experts
+        else:
+            ff = ffn_mult * d * f
+        per = attn + ff
+        if self.family == "hybrid":
+            # crude split: attn layers vs recurrent layers
+            pat = self.block_pattern or ("rec", "rec", "attn")
+            n_attn = sum(1 for i in range(l) if pat[i % len(pat)] == "attn")
+            n_rec = l - n_attn
+            w = self.lru_width or d
+            rec_per = 2 * d * w + 4 * w + w * d + ffn_mult * d * f
+            return emb + n_attn * per + n_rec * rec_per
+        return emb + l * per
+
+    def n_active_params(self) -> int:
+        """Per-token active params (MoE counts top_k experts only)."""
+        if not self.n_experts:
+            return self.n_params()
+        d, f, l = self.d_model, self.d_ff, self.n_layers
+        ffn_mult = 3 if self.mlp in ("swiglu", "geglu") else 2
+        inactive = l * (self.n_experts - self.top_k) * ffn_mult * d * f
+        return self.n_params() - inactive
+
+
+_REGISTRY: dict[str, Any] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _REGISTRY:
+        # import config modules lazily so the registry is populated
+        import repro.configs  # noqa: F401
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def list_archs() -> list[str]:
+    import repro.configs  # noqa: F401
+    return sorted(_REGISTRY)

@@ -1,0 +1,15 @@
+"""llama-3.2-vision-11b [vlm]: interleaved gated cross-attention layers;
+vision frontend is a STUB (input_specs provides precomputed patch
+embeddings). [hf:meta-llama/Llama-3.2-11B-Vision; unverified]"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("llama-3.2-vision-11b")
+def llama_32_vision() -> ModelConfig:
+    return ModelConfig(
+        name="llama-3.2-vision-11b", family="vlm",
+        n_layers=40, d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+        d_ff=14336, vocab=128256, mlp="swiglu", xattn_group=5,
+        n_img_tokens=1600, d_vision=1280, rope_theta=5e5,
+        source="hf:meta-llama/Llama-3.2-11B-Vision",
+    )

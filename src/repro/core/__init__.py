@@ -1,0 +1,27 @@
+"""Core BNN/BBP primitives (the paper's contribution)."""
+from repro.core.binarize import (
+    hard_tanh, hard_sigmoid, ste_mask, binarize, binarize_det,
+    binarize_stoch, binary_act, clip_weights, saturation_fraction,
+)
+from repro.core.ap2 import ap2, ap2_exponent, shift_mul, is_power_of_two
+from repro.core.bitpack import (
+    pack_bits, unpack_bits, packed_dot, packed_width, packed_nbytes,
+)
+from repro.core.shift_bn import (
+    BNParams, BNState, init_bn, batch_norm, shift_batch_norm,
+)
+from repro.core.layers import (
+    QuantMode, qmatmul, quant_weights, quant_acts, DenseParams, init_dense,
+    dense,
+)
+
+__all__ = [
+    "hard_tanh", "hard_sigmoid", "ste_mask", "binarize", "binarize_det",
+    "binarize_stoch", "binary_act", "clip_weights", "saturation_fraction",
+    "ap2", "ap2_exponent", "shift_mul", "is_power_of_two",
+    "pack_bits", "unpack_bits", "packed_dot", "packed_width",
+    "packed_nbytes",
+    "BNParams", "BNState", "init_bn", "batch_norm", "shift_batch_norm",
+    "QuantMode", "qmatmul", "quant_weights", "quant_acts", "DenseParams",
+    "init_dense", "dense",
+]

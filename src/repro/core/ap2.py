@@ -1,0 +1,53 @@
+"""AP2: approximate power-of-2 proxy (paper Eq. 9-10).
+
+AP2(z) rounds |z| to the nearest power of two and keeps the sign — the
+"index of the most significant bit" proxy the paper uses so multiplications
+become binary shifts. On TPU we realize the *numerics* (values constrained
+to +-2^k); the energy win of shift-vs-multiply is modeled in core/energy.py
+(see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def ap2(z: Array) -> Array:
+    """Round each element of z to sign(z) * 2^round(log2 |z|). ap2(0) = 0.
+
+    Uses ldexp for the power construction — XLA's exp2 is inexact even at
+    integer arguments (exp2(13) = 8192.004 on CPU), and an AP2 value that
+    is not an exact power of two would not be a shift."""
+    mag = jnp.abs(z)
+    exp = jnp.round(jnp.log2(jnp.where(mag > 0, mag, 1.0))).astype(jnp.int32)
+    pow2 = jnp.ldexp(jnp.ones_like(mag), exp)
+    out = jnp.sign(z) * pow2
+    return jnp.where(mag > 0, out, 0.0).astype(z.dtype)
+
+
+def ap2_exponent(z: Array) -> Array:
+    """Integer shift amount: round(log2 |z|). Defined as 0 where z == 0."""
+    mag = jnp.abs(z)
+    return jnp.round(jnp.log2(jnp.where(mag > 0, mag, 1.0))).astype(jnp.int32)
+
+
+def shift_mul(x: Array, z: Array) -> Array:
+    """x <<>> AP2(z): multiply x by the power-of-2 proxy of z.
+
+    Semantically a left/right binary shift of x by ap2_exponent(z) with
+    z's sign; implemented as a multiply by the exact power of two (bitwise
+    lossless in floating point).
+    """
+    return x * ap2(z)
+
+
+def is_power_of_two(z: Array) -> Array:
+    """True where |z| is an exact power of two (or zero).
+
+    Bit-exact via frexp (XLA's log2/exp2 are themselves inexact): a float
+    is a power of two iff its mantissa is exactly 0.5."""
+    mag = jnp.abs(z)
+    mant, _ = jnp.frexp(jnp.where(mag > 0, mag, 0.5))
+    return mant == 0.5

@@ -1,0 +1,105 @@
+"""Binarization primitives for Binarized Back-Propagation (BBP).
+
+Implements the paper's Eqs. (1)-(6):
+  * hard tanh HT(x)                                   (Eq. 4)
+  * hard sigmoid sigma(x) = (HT(x)+1)/2
+  * deterministic binarization  sign-ish               (Eq. 1 / 5)
+  * stochastic binarization     P(+1)=sigma(x)         (Eq. 2 / 3)
+  * straight-through estimator  dHT/dx = 1[|x|<=1]     (Eq. 6)
+
+All binarizers return values in {-1, +1} of the input dtype and carry an
+STE custom_vjp so they are drop-in differentiable modules.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def hard_tanh(x: Array) -> Array:
+    """HT(x), Eq. (4)."""
+    return jnp.clip(x, -1.0, 1.0)
+
+
+def hard_sigmoid(x: Array) -> Array:
+    """sigma(x) = (HT(x)+1)/2 in [0, 1]."""
+    return jnp.clip((x + 1.0) * 0.5, 0.0, 1.0)
+
+
+def ste_mask(x: Array) -> Array:
+    """Eq. (6): pass gradient only where the input is unsaturated."""
+    return (jnp.abs(x) <= 1.0).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic binarization (Eq. 1 / Eq. 5) with STE backward.
+# ---------------------------------------------------------------------------
+@jax.custom_vjp
+def binarize_det(x: Array) -> Array:
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def _binarize_det_fwd(x):
+    return binarize_det(x), x
+
+
+def _binarize_det_bwd(x, g):
+    return (g * ste_mask(x),)
+
+
+binarize_det.defvjp(_binarize_det_fwd, _binarize_det_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Stochastic binarization (Eq. 2 / Eq. 3) with STE backward.
+#
+# P(+1) = sigma(x); expectation is HT(x), so the STE through HT is the
+# paper's justified surrogate gradient.
+# ---------------------------------------------------------------------------
+@jax.custom_vjp
+def binarize_stoch(x: Array, key: Array) -> Array:
+    p = hard_sigmoid(x)
+    u = jax.random.uniform(key, x.shape, dtype=x.dtype)
+    return jnp.where(u < p, 1.0, -1.0).astype(x.dtype)
+
+
+def _binarize_stoch_fwd(x, key):
+    return binarize_stoch(x, key), x
+
+
+def _binarize_stoch_bwd(x, g):
+    return (g * ste_mask(x), None)
+
+
+binarize_stoch.defvjp(_binarize_stoch_fwd, _binarize_stoch_bwd)
+
+
+def binarize(x: Array, *, stochastic: bool = False, key: Array | None = None) -> Array:
+    """Unified entry point. Train phase: stochastic=True + key (Eq. 3);
+    test phase / weights-deterministic mode: stochastic=False (Eq. 1/5)."""
+    if stochastic:
+        if key is None:
+            raise ValueError("stochastic binarization requires a PRNG key")
+        return binarize_stoch(x, key)
+    return binarize_det(x)
+
+
+# ---------------------------------------------------------------------------
+# Binarized activation: clip via HT then binarize (paper §3.2 forward pass).
+# The STE of the composition is exactly Eq. (6) (HT's derivative), because
+# binarize_*'s own STE mask composes with HT's clip mask to the same support.
+# ---------------------------------------------------------------------------
+def binary_act(x: Array, *, stochastic: bool = False, key: Array | None = None) -> Array:
+    return binarize(hard_tanh(x), stochastic=stochastic, key=key)
+
+
+def clip_weights(w: Array) -> Array:
+    """Post-update weight clipping to [-1, 1] (paper §2.1 / Algorithm 1)."""
+    return jnp.clip(w, -1.0, 1.0)
+
+
+def saturation_fraction(w: Array, tol: float = 1e-3) -> Array:
+    """Fraction of weights at the clipping edges (paper Fig. 4 metric)."""
+    return jnp.mean((jnp.abs(w) >= 1.0 - tol).astype(jnp.float32))

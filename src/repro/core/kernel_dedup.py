@@ -1,0 +1,73 @@
+"""Kernel-repetition analysis (paper §4.2).
+
+Binary k x k kernels live in a 2^(k*k) universe, so conv layers repeat 2D
+kernels heavily (paper: ~37% unique on their CIFAR-10 net). An *inverse*
+kernel (-K) counts as a repetition too (a popcount negation). On TPU we use
+this as (a) a static analysis feeding the energy model and (b) a
+compile-time dedup for frozen inference weights (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+
+def kernel_signatures(w) -> np.ndarray:
+    """w: (kh, kw, cin, cout) or (cout, cin, kh, kw) binary conv weights.
+    Returns an int64 signature per 2D kernel slice (cin*cout of them),
+    canonicalized so K and -K share a signature."""
+    w = np.asarray(w)
+    if w.ndim != 4:
+        raise ValueError("expected 4D conv weights")
+    # normalize to (n2d, kh*kw)
+    if w.shape[0] <= 16 and w.shape[1] <= 16:  # (kh, kw, cin, cout)
+        flat = w.reshape(w.shape[0] * w.shape[1], -1).T
+    else:  # (cout, cin, kh, kw)
+        flat = w.reshape(w.shape[0] * w.shape[1], -1)
+    bits = (flat >= 0).astype(np.int64)
+    # canonical form: ensure first bit is 1 (fold K / -K together)
+    invert = bits[:, :1] == 0
+    bits = np.where(invert, 1 - bits, bits)
+    weights = (1 << np.arange(bits.shape[1], dtype=np.int64))
+    return bits @ weights
+
+
+def unique_kernel_fraction(w) -> float:
+    """Fraction of unique 2D kernels (inverse pairs folded), per §4.2."""
+    sig = kernel_signatures(w)
+    return float(len(np.unique(sig))) / float(len(sig))
+
+
+def dedup_plan(w) -> dict:
+    """Compile-time dedup plan for frozen inference weights: for each 2D
+    kernel slice, the index of its canonical representative and a +-1 sign.
+
+    Returns {'rep_index': (n2d,), 'sign': (n2d,), 'n_unique': int}."""
+    sig = kernel_signatures(w)
+    w = np.asarray(w)
+    if w.shape[0] <= 16 and w.shape[1] <= 16:
+        flat = (w.reshape(w.shape[0] * w.shape[1], -1).T >= 0)
+    else:
+        flat = (w.reshape(w.shape[0] * w.shape[1], -1) >= 0)
+    uniq, rep_index = np.unique(sig, return_inverse=True)
+    # representative = first occurrence per signature
+    first = np.zeros(len(uniq), dtype=np.int64)
+    seen = {}
+    for i, s in enumerate(sig):
+        if s not in seen:
+            seen[s] = i
+    for j, s in enumerate(uniq):
+        first[j] = seen[s]
+    sign = np.where(
+        (flat == flat[first[rep_index]]).all(axis=1), 1, -1
+    ).astype(np.int32)
+    return {"rep_index": rep_index, "first": first, "sign": sign,
+            "n_unique": int(len(uniq))}
+
+
+def apply_dedup(x_convolved_unique: jnp.ndarray, plan: dict) -> jnp.ndarray:
+    """Given conv results for the unique kernels only
+    (..., n_unique), expand back to all kernels with signs."""
+    gathered = x_convolved_unique[..., plan["rep_index"]]
+    return gathered * jnp.asarray(plan["sign"], x_convolved_unique.dtype)

@@ -1,0 +1,103 @@
+"""Quantized linear layers — the paper's technique as a composable module.
+
+`QuantMode` selects the arithmetic of every MAC-dominated projection in the
+framework (paper models *and* the assigned LM architectures):
+
+  NONE  — full-precision baseline
+  BC    — BinaryConnect (Courbariaux'15a): binary weights, fp activations
+          (the paper's primary baseline; we reproduce it too)
+  BBP   — the paper: binary weights AND binary activations, stochastic at
+          train time, deterministic at inference, STE everywhere
+  BBP_DET — BBP with deterministic binarization also at train time
+            (paper Eq. 1/5; cheaper, slightly worse regularization)
+
+The forward of a binarized matmul is mathematically sign(x) @ sign(w); the
+XNOR+popcount realization lives in repro.kernels and is bit-exact with this
+module (tests assert it).
+"""
+from __future__ import annotations
+
+import enum
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.binarize import binarize, binary_act, hard_tanh
+
+Array = jax.Array
+
+
+class QuantMode(str, enum.Enum):
+    NONE = "none"
+    BC = "bc"
+    BBP = "bbp"
+    BBP_DET = "bbp_det"
+
+
+def quant_weights(w: Array, mode: QuantMode, *, train: bool,
+                  key: Array | None = None) -> Array:
+    if mode == QuantMode.NONE:
+        return w
+    if mode in (QuantMode.BC, QuantMode.BBP):
+        # stochastic at train (Eq. 2), deterministic sign at test (Eq. 5)
+        return binarize(w, stochastic=train and key is not None, key=key)
+    if mode == QuantMode.BBP_DET:
+        return binarize(w, stochastic=False)
+    raise ValueError(mode)
+
+
+def quant_acts(x: Array, mode: QuantMode, *, train: bool,
+               key: Array | None = None) -> Array:
+    if mode in (QuantMode.NONE, QuantMode.BC):
+        return x
+    if mode == QuantMode.BBP:
+        return binary_act(x, stochastic=train and key is not None, key=key)
+    if mode == QuantMode.BBP_DET:
+        return binary_act(x, stochastic=False)
+    raise ValueError(mode)
+
+
+def qmatmul(x: Array, w: Array, mode: QuantMode, *, train: bool = False,
+            key: Array | None = None,
+            precision=None) -> Array:
+    """Quantized x @ w with the mode's weight/activation treatment.
+
+    x: (..., K), w: (K, N). Keys are split internally for weight vs
+    activation noise (independent binarization noise, paper §2).
+    """
+    kw = ka = None
+    if key is not None:
+        kw, ka = jax.random.split(key)
+    xq = quant_acts(x, mode, train=train, key=ka)
+    # cast the fp32 master to the compute dtype BEFORE quantizing: any
+    # FSDP all-gather GSPMD inserts then moves bf16 (or, post-binarize,
+    # values representable in 1 bit), not fp32 masters — halves weight
+    # collective traffic (EXPERIMENTS.md §Perf)
+    wq = quant_weights(w.astype(xq.dtype), mode, train=train, key=kw)
+    return jnp.matmul(xq, wq, precision=precision)
+
+
+class DenseParams(NamedTuple):
+    w: Array
+    b: Array | None
+
+
+def init_dense(key: Array, in_dim: int, out_dim: int, *, bias: bool = True,
+               dtype=jnp.float32, binary_init: bool = False) -> DenseParams:
+    """Paper init: uniform(-1, 1) for binary nets; scaled Glorot otherwise."""
+    if binary_init:
+        w = jax.random.uniform(key, (in_dim, out_dim), dtype, -1.0, 1.0)
+    else:
+        scale = jnp.sqrt(2.0 / (in_dim + out_dim)).astype(dtype)
+        w = jax.random.normal(key, (in_dim, out_dim), dtype) * scale
+    b = jnp.zeros((out_dim,), dtype) if bias else None
+    return DenseParams(w=w, b=b)
+
+
+def dense(params: DenseParams, x: Array, mode: QuantMode, *,
+          train: bool = False, key: Array | None = None) -> Array:
+    y = qmatmul(x, params.w, mode, train=train, key=key)
+    if params.b is not None:
+        y = y + params.b
+    return y

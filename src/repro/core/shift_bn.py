@@ -1,0 +1,93 @@
+"""Shift-based Batch Normalization (paper §3.3, Eqs. 7-10).
+
+Standard BN multiplies are replaced by power-of-2 shift proxies:
+    C(x)        = x - <x>
+    var_p2      = < C(x) << AP2(C(x)) >          (squaring -> self-shift)
+    inv_std_p2  = AP2( 1/sqrt(var_p2) )          (Eq. 9)
+    BN_AP2(x)   = (C(x) << inv_std_p2) << AP2(gamma) + beta   (Eq. 10)
+
+We provide both the faithful shift-BN and the exact BN baseline, with
+running statistics for inference, as pure functions over an explicit
+(params, state) pair so they compose under jit/pjit.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ap2 import ap2, shift_mul
+
+Array = jax.Array
+
+
+class BNParams(NamedTuple):
+    gamma: Array
+    beta: Array
+
+
+class BNState(NamedTuple):
+    mean: Array
+    var: Array
+    count: Array  # scalar step counter for the running average
+
+
+def init_bn(dim: int, dtype=jnp.float32) -> tuple[BNParams, BNState]:
+    return (
+        BNParams(gamma=jnp.ones((dim,), dtype), beta=jnp.zeros((dim,), dtype)),
+        BNState(mean=jnp.zeros((dim,), dtype), var=jnp.ones((dim,), dtype),
+                count=jnp.zeros((), jnp.int32)),
+    )
+
+
+def _moments(x: Array) -> tuple[Array, Array]:
+    axes = tuple(range(x.ndim - 1))
+    mean = jnp.mean(x, axis=axes)
+    cent = x - mean
+    return mean, cent
+
+
+def batch_norm(params: BNParams, state: BNState, x: Array, *, train: bool,
+               eps: float = 1e-4, momentum: float = 0.9
+               ) -> tuple[Array, BNState]:
+    """Exact BN baseline (Ioffe & Szegedy)."""
+    if train:
+        mean, cent = _moments(x)
+        var = jnp.mean(cent * cent, axis=tuple(range(x.ndim - 1)))
+        new_state = BNState(
+            mean=momentum * state.mean + (1 - momentum) * mean,
+            var=momentum * state.var + (1 - momentum) * var,
+            count=state.count + 1,
+        )
+    else:
+        mean, var = state.mean, state.var
+        cent = x - mean
+        new_state = state
+    inv = jax.lax.rsqrt(var + eps)
+    return cent * inv * params.gamma + params.beta, new_state
+
+
+def shift_batch_norm(params: BNParams, state: BNState, x: Array, *,
+                     train: bool, eps: float = 1e-4, momentum: float = 0.9
+                     ) -> tuple[Array, BNState]:
+    """Shift-based BN (Eqs. 9-10): every multiply is an AP2 shift proxy."""
+    if train:
+        mean, cent = _moments(x)
+        # Eq. 9: replace C(x)^2 by C(x) << AP2(C(x))  (self-shift square proxy)
+        var_p2 = jnp.mean(shift_mul(cent, cent),
+                          axis=tuple(range(x.ndim - 1)))
+        var_p2 = jnp.abs(var_p2)  # self-shift keeps sign^2 >= 0 but be safe
+        new_state = BNState(
+            mean=momentum * state.mean + (1 - momentum) * mean,
+            var=momentum * state.var + (1 - momentum) * var_p2,
+            count=state.count + 1,
+        )
+    else:
+        mean, var_p2 = state.mean, state.var
+        cent = x - mean
+        new_state = state
+    inv_p2 = ap2(jax.lax.rsqrt(var_p2 + eps))     # Eq. 9 outer AP2
+    # Eq. 10: two chained shifts + add
+    out = shift_mul(cent * inv_p2, params.gamma) + params.beta
+    return out, new_state

@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the paper's binary GEMM (XNOR + popcount).
+
+binary_gemm.py — pl.pallas_call kernels (VPU popcount path, MXU fused path)
+ops.py         — jit'd public wrappers with STE custom_vjp
+ref.py         — pure-jnp oracles the kernels are tested against
+"""
+from repro.kernels.ops import (
+    binary_matmul, binary_matmul_vpu, binary_matmul_mxu, binary_conv2d,
+)
+from repro.kernels.binary_gemm import binary_gemm_vpu, binary_gemm_mxu
+from repro.kernels.selective_scan import selective_scan
+from repro.kernels.pack import pack_bits_kernel
+
+__all__ = [
+    "binary_matmul", "binary_matmul_vpu", "binary_matmul_mxu",
+    "binary_conv2d", "binary_gemm_vpu", "binary_gemm_mxu",
+    "selective_scan", "pack_bits_kernel",
+]

@@ -1,0 +1,95 @@
+"""Jit'd public wrappers around the Pallas binary-GEMM kernels.
+
+`binary_matmul` is the user-facing op: float (or +-1) operands in, float
+out, semantics sign(x) @ sign(w). Path selection:
+  * 'vpu'  — bit-pack + XNOR/popcount kernel (the paper's kernel, TPU-ized)
+  * 'mxu'  — fused sign-quantize + MXU matmul
+  * 'ref'  — pure-jnp oracle (used by tests and as the lowering inside
+             large pjit graphs, where XLA fuses it anyway)
+It also carries a custom_vjp with the paper's STE so it can be dropped
+into training graphs directly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.binarize import ste_mask
+from repro.core.bitpack import pack_bits
+from repro.kernels import ref
+from repro.kernels.binary_gemm import binary_gemm_mxu, binary_gemm_vpu
+
+Array = jax.Array
+
+
+def _forward(x: Array, w: Array, path: str) -> Array:
+    if path == "vpu":
+        k = x.shape[-1]
+        a_p = pack_bits(x)
+        b_p = pack_bits(w.T)
+        lead = x.shape[:-1]
+        a2 = a_p.reshape(-1, a_p.shape[-1])
+        out = binary_gemm_vpu(a2, b_p, k).astype(jnp.float32)
+        return out.reshape(lead + (w.shape[-1],))
+    if path == "mxu":
+        lead = x.shape[:-1]
+        out = binary_gemm_mxu(x.reshape(-1, x.shape[-1]), w)
+        return out.reshape(lead + (w.shape[-1],))
+    if path == "ref":
+        return jnp.matmul(ref.sign_pm1(x), ref.sign_pm1(w))
+    raise ValueError(path)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def binary_matmul(x: Array, w: Array, path: str = "vpu") -> Array:
+    """sign(x) @ sign(w) with STE gradients (paper Eq. 6)."""
+    return _forward(x, w, path)
+
+
+def _fwd(x, w, path):
+    return _forward(x, w, path), (x, w)
+
+
+def _bwd(path, res, g):
+    x, w = res
+    xb = ref.sign_pm1(x)
+    wb = ref.sign_pm1(w)
+    # STE: grad flows through the sign() of each operand where unsaturated
+    gx = jnp.matmul(g, wb.T) * ste_mask(x)
+    gw = jnp.matmul(xb.reshape(-1, xb.shape[-1]).T,
+                    g.reshape(-1, g.shape[-1])) * ste_mask(w)
+    return gx.astype(x.dtype), gw.astype(w.dtype)
+
+
+binary_matmul.defvjp(_fwd, _bwd)
+
+
+@jax.jit
+def binary_matmul_vpu(x: Array, w: Array) -> Array:
+    return binary_matmul(x, w, "vpu")
+
+
+@jax.jit
+def binary_matmul_mxu(x: Array, w: Array) -> Array:
+    return binary_matmul(x, w, "mxu")
+
+
+def binary_conv2d(x: Array, w: Array, *, path: str = "vpu") -> Array:
+    """Binary conv via im2col + binary GEMM (SAME padding, stride 1).
+
+    x: (B, H, W, Cin) float; w: (kh, kw, Cin, Cout) float.
+    Returns (B, H, W, Cout) float32 == conv(sign(x), sign(w)).
+    """
+    kh, kw, cin, cout = w.shape
+    b, h, wd, _ = x.shape
+    # sign-binarize BEFORE patch extraction so the implicit zero-padding of
+    # the image border binarizes to +1 consistently in both paths
+    patches = jax.lax.conv_general_dilated_patches(
+        ref.sign_pm1(x), (kh, kw), (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    cols = patches.reshape(b * h * wd, cin * kh * kw)
+    wmat = w.transpose(2, 0, 1, 3).reshape(cin * kh * kw, cout)
+    out = binary_matmul(cols, wmat, path)
+    return out.reshape(b, h, wd, cout)

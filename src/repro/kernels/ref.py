@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for the binary GEMM kernels.
+
+These define the semantics the Pallas kernels must match bit-exactly:
+    binary_matmul(x, w) == sign(x) @ sign(w)
+with sign(0) := +1 (the paper's Eq. 5 convention, matching binarize_det).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitpack import pack_bits, packed_dot
+
+Array = jax.Array
+
+
+def sign_pm1(x: Array) -> Array:
+    return jnp.where(x >= 0, 1.0, -1.0).astype(jnp.float32)
+
+
+def binary_matmul_ref(x: Array, w: Array) -> Array:
+    """Dense float oracle: sign(x) @ sign(w). x: (M, K), w: (K, N)."""
+    return jnp.matmul(sign_pm1(x), sign_pm1(w)).astype(jnp.float32)
+
+
+def binary_matmul_packed_ref(a_packed: Array, b_packed: Array, k: int) -> Array:
+    """Packed oracle. a_packed: (M, KW) uint32, b_packed: (N, KW) uint32
+    (rhs packed along K after transpose). Returns (M, N) int32."""
+    return packed_dot(a_packed[:, None, :], b_packed[None, :, :], k)
+
+
+def binary_conv2d_ref(x: Array, w: Array) -> Array:
+    """Oracle for ops.binary_conv2d: conv(sign(x), sign(w)) with SAME-size
+    output and +1-valued border padding (binarized padding convention —
+    sign(0) := +1, so the binary pipeline pads with +1, not 0)."""
+    kh, kw, _, _ = w.shape
+    ph, pw = (kh - 1) // 2, (kw - 1) // 2
+    xp = jnp.pad(sign_pm1(x), ((0, 0), (ph, kh - 1 - ph), (pw, kw - 1 - pw),
+                               (0, 0)), constant_values=1.0)
+    return jax.lax.conv_general_dilated(
+        xp, sign_pm1(w), (1, 1), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")).astype(jnp.float32)
+
+
+def selective_scan_ref(dt: Array, xi: Array, bmat: Array, cmat: Array,
+                       a_mat: Array) -> tuple[Array, Array]:
+    """Oracle for kernels.selective_scan: sequential diagonal recurrence
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ; y_t = C_t . h_t."""
+    def step(h, xs):
+        dt_t, xi_t, b_t, c_t = xs
+        a = jnp.exp(dt_t[..., None] * a_mat)
+        h = a * h + (dt_t * xi_t)[..., None] * b_t[:, None, :]
+        return h, jnp.einsum("bdn,bn->bd", h, c_t)
+
+    b, t, d = dt.shape
+    h0 = jnp.zeros((b, d, a_mat.shape[-1]), jnp.float32)
+    h, ys = jax.lax.scan(
+        step, h0, (dt.swapaxes(0, 1).astype(jnp.float32),
+                   xi.swapaxes(0, 1).astype(jnp.float32),
+                   bmat.swapaxes(0, 1).astype(jnp.float32),
+                   cmat.swapaxes(0, 1).astype(jnp.float32)))
+    return ys.swapaxes(0, 1), h
+
+
+def pack_operands(x: Array, w: Array) -> tuple[Array, Array, int]:
+    """Pack (M, K) lhs and (K, N) rhs into the kernel wire format."""
+    k = x.shape[-1]
+    assert w.shape[0] == k
+    return pack_bits(x), pack_bits(w.T), k

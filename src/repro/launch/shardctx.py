@@ -1,0 +1,114 @@
+"""Activation-sharding hints, decoupled from model code.
+
+Models call `hint_residual(x)` / `hint_logits(x)` at layer boundaries;
+outside a context these are no-ops, inside `activation_sharding(mesh)`
+they become with_sharding_constraint's implementing sequence parallelism:
+the residual stream saved across the layer scan is sharded over the
+'model' axis on its sequence dim, cutting saved-activation memory by the
+TP degree (Megatron-SP). GSPMD inserts the all-gather before attention/FFN
+and the reduce-scatter after — the collective cost the roofline analysis
+accounts for (EXPERIMENTS.md §Perf discusses the trade).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_shard_hints", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, *, global_batch: int | None = None,
+                        seq_shard: bool = True):
+    from repro.launch.shardings import div_batch_axes
+    from repro.launch.mesh import batch_axes
+    ba = batch_axes(mesh) if global_batch is None \
+        else div_batch_axes(mesh, global_batch)
+    token = _CTX.set({
+        "ba": ba,
+        "model_size": mesh.shape.get("model", 1),
+        "seq": seq_shard,
+    })
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def hint_residual(x):
+    """x: (B, S, D) residual stream at a layer boundary."""
+    ctx = _CTX.get()
+    if ctx is None or x.ndim != 3:
+        return x
+    seq_ok = ctx["seq"] and x.shape[1] % ctx["model_size"] == 0 \
+        and x.shape[1] > 1
+    spec = P(ctx["ba"], "model" if seq_ok else None, None)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def hint_gathered(x):
+    """Matmul input (post-norm activations): sequence gathered, batch
+    sharded — the Megatron-SP all-gather point. Without this GSPMD
+    propagates the sequence sharding INTO the matmuls and gathers the
+    (much larger) weights instead."""
+    ctx = _CTX.get()
+    if ctx is None or x.ndim != 3:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(ctx["ba"], None, None))
+
+
+def hint_ffn_hidden(x):
+    """FFN hidden / attention heads: model-sharded feature dim."""
+    ctx = _CTX.get()
+    if ctx is None or x.ndim != 3:
+        return x
+    if x.shape[-1] % ctx["model_size"]:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(ctx["ba"], None, "model"))
+
+
+def hint_expert_buf(x):
+    """MoE dispatch buffers (E, C, D): experts over 'model' (EP) so each
+    device runs only its experts; GSPMD realizes the token->expert
+    exchange as an all-to-all instead of replicating the buffers."""
+    ctx = _CTX.get()
+    if ctx is None or x.ndim != 3:
+        return x
+    if x.shape[0] % ctx["model_size"]:
+        return x
+    return jax.lax.with_sharding_constraint(x, P("model", None, None))
+
+
+def hint_attn_q(x):
+    """Attention queries (B, S, H, d): explicit head sharding over 'model'
+    when the head count divides it.
+
+    For archs whose head count does NOT divide the model axis
+    (phi3/llama4-scout: 40 heads on 16-way TP) GSPMD replicates part of
+    the attention computation. Sequence-sharding q instead (context
+    parallelism) was tried and REFUTED: it fixes the compute term
+    (phi3 prefill 5.0 -> 3.1 s) but the kv-chunk scan then reshards the
+    score tensors every chunk iteration ("involuntary full
+    rematerialization"), exploding collectives 5.3 -> 280 s. The right
+    fix on hardware is padding the head dim to the TP degree inside the
+    attention kernel — recorded as future work (EXPERIMENTS.md §Perf)."""
+    ctx = _CTX.get()
+    if ctx is None or x.ndim != 4:
+        return x
+    if x.shape[2] % ctx["model_size"] == 0:
+        return jax.lax.with_sharding_constraint(
+            x, P(ctx["ba"], None, "model", None))
+    return x
+
+
+def hint_batch_only(x):
+    """Constrain only the leading batch dim (decode-path activations)."""
+    ctx = _CTX.get()
+    if ctx is None or x.ndim < 1:
+        return x
+    spec = P(ctx["ba"], *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,168 @@
+"""Parameter/input sharding rules: param-tree path -> PartitionSpec.
+
+Scheme (DESIGN.md §5): 2-D "FSDP x TP" —
+  * weight matrices: rows over 'data' (ZeRO-3 gather), cols over 'model'
+    (Megatron) — or the transpose for row-parallel (contracting) matrices
+    so the TP all-reduce lands after the second matmul of each pair;
+  * embeddings vocab-parallel over 'model', FSDP over 'data';
+  * MoE expert stacks: experts over 'model' (EP), FSDP over 'data';
+  * small vectors (biases, norms, gates) replicated;
+  * 'pod' axis: pure DP — parameters replicated across pods.
+
+Rules are matched on the flattened path string, most-specific first.
+A leading scan axis (L or group axes) is detected by array rank vs the
+rule's spec rank and padded with None.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# (regex on path, spec for the *trailing* dims of the leaf)
+_RULES: list[tuple[str, tuple]] = [
+    # --- embeddings / head ---
+    (r"\bembed\b", ("model", "data")),
+    (r"\blm_head\b", ("data", "model")),
+    # --- attention (column-parallel in, row-parallel out) ---
+    (r"attn.*\bwq\b|\bwq\b", ("data", "model")),
+    (r"\bwk\b", ("data", "model")),
+    (r"\bwv\b", ("data", "model")),
+    (r"\bwo\b", ("model", "data")),
+    (r"\bbq\b|\bbk\b|\bbv\b", ("model",)),
+    # --- MoE ---
+    (r"experts.*w_gate", ("model", "data", None)),
+    (r"experts.*w_up", ("model", "data", None)),
+    (r"experts.*w_down", ("model", None, "data")),
+    (r"\brouter\b", (None, None)),
+    # --- dense FFN ---
+    (r"\bw_gate\b", ("data", "model")),
+    (r"\bw_up\b", ("data", "model")),
+    (r"\bw_down\b", ("model", "data")),
+    # --- mamba ---
+    (r"\bin_proj\b", ("data", "model")),
+    (r"\bconv_w\b", (None, "model")),
+    (r"\bconv_b\b", ("model",)),
+    (r"\bx_proj\b", ("model", None)),
+    (r"\bdt_w\b", (None, "model")),
+    (r"\bdt_b\b", ("model",)),
+    (r"\bA_log\b", ("model", None)),
+    (r"\bD\b", ("model",)),
+    (r"\bout_proj\b", ("model", "data")),
+    # --- RG-LRU ---
+    (r"\bw_x\b", ("data", "model")),
+    (r"\bw_input_gate\b|\bw_rec_gate\b", ("model", None)),
+    (r"\bb_input_gate\b|\bb_rec_gate\b|\blam\b", (None,)),
+    (r"\bw_out\b", ("model", "data")),
+    # --- catch-alls ---
+    (r"\bscale\b|\bbias\b|\bgate\b|\bb\b", None),   # replicate small leaves
+]
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", k)) for k in path)
+
+
+def spec_for(path, leaf) -> P:
+    s = _path_str(path)
+    for pat, trailing in _RULES:
+        if re.search(pat, s):
+            if trailing is None:
+                return P()
+            pad = leaf.ndim - len(trailing)
+            if pad < 0:   # leaf smaller than rule (e.g. vmapped scalars)
+                return P()
+            return P(*((None,) * pad + tuple(trailing)))
+    # default: replicate
+    return P()
+
+
+def param_specs(params) -> Any:
+    """Pytree of PartitionSpec matching `params` (works on SDS trees too)."""
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def param_shardings(mesh, params) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), param_specs(params))
+
+
+def batch_spec(mesh) -> P:
+    from repro.launch.mesh import batch_axes
+    return P(batch_axes(mesh))
+
+
+def div_batch_axes(mesh, b: int) -> tuple[str, ...]:
+    """Batch axes usable for a global batch of size b (drop axes until the
+    product divides b — long_500k has batch 1 and must replicate)."""
+    from repro.launch.mesh import batch_axes
+    axes = list(batch_axes(mesh))
+    while axes:
+        prod = 1
+        for a in axes:
+            prod *= mesh.shape[a]
+        if b % prod == 0:
+            return tuple(axes)
+        axes.pop(0)
+    return ()
+
+
+def batch_shardings(mesh, batch_sds) -> Any:
+    """Shard the leading (batch) dim of every batch leaf."""
+    ax = batch_spec(mesh)
+
+    def one(leaf):
+        pad = (None,) * (leaf.ndim - 1)
+        return NamedSharding(mesh, P(*ax, *pad))
+
+    return jax.tree.map(one, batch_sds)
+
+
+def cache_shardings(mesh, cache_sds, family: str,
+                    global_batch: int | None = None) -> Any:
+    """KV caches / SSM states: batch dim sharded over data axes, the
+    flattened head (or channel) dim over 'model'. Cache layouts:
+      transformer: (L, B, T, kv, hd)   [+ vlm group variants]
+      mamba:  conv (L,B,K-1,di) / h (L,B,di,N)
+      rg: rec_conv (G,R,B,K-1,W), rec_h (G,R,B,W), attn_k (G,B,W,kv,hd)
+    We place 'model' on the channel-like axis and batch axes on B.
+    """
+    from repro.launch.mesh import batch_axes
+    ba = batch_axes(mesh) if global_batch is None \
+        else div_batch_axes(mesh, global_batch)
+
+    def one(path, leaf):
+        name = _path_str(path)
+        nd = leaf.ndim
+        if family in ("dense", "moe", "audio", "vlm"):
+            # (..., B, T, kv, hd): batch at -4; 'model' on head_dim (the kv
+            # head count (1-32) need not divide the model axis, hd does)
+            spec = [None] * nd
+            spec[-4] = ba
+            spec[-1] = "model"
+            return NamedSharding(mesh, P(*spec))
+        if family == "ssm":
+            spec = [None] * nd
+            if name.endswith("conv"):
+                spec[-3] = ba          # (L,B,K-1,di)
+                spec[-1] = "model"
+            else:                      # h: (L,B,di,N)
+                spec[-3] = ba
+                spec[-2] = "model"
+            return NamedSharding(mesh, P(*spec))
+        if family == "hybrid":
+            spec = [None] * nd
+            if "attn" in name:         # (G,B,W,kv,hd)
+                spec[-4] = ba
+                spec[-1] = "model"
+            elif "conv" in name:       # (...,B,K-1,W)
+                spec[-3] = ba
+                spec[-1] = "model"
+            else:                      # h (...,B,W)
+                spec[-2] = ba
+                spec[-1] = "model"
+            return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(one, cache_sds)

@@ -1,0 +1,70 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run currency.
+
+`input_specs(cfg, shape)` returns the abstract inputs for the shape cell's
+step function (train / prefill / decode) without allocating anything.
+`abstract_state(cfg, model, opt)` gives abstract params/optimizer state via
+jax.eval_shape.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeSpec
+from repro.models.api import Model
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _img_spec(cfg: ModelConfig, batch: int) -> SDS:
+    return SDS((batch, cfg.n_img_tokens, cfg.d_vision), jnp.bfloat16
+               if cfg.dtype == "bfloat16" else jnp.float32)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": SDS((b, s), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["img_emb"] = _img_spec(cfg, b)
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    return train_batch_specs(cfg, shape)
+
+
+def cache_specs(cfg: ModelConfig, model: Model, batch: int, max_len: int):
+    return jax.eval_shape(lambda: model.init_cache(batch, max_len))
+
+
+def decode_specs(cfg: ModelConfig, model: Model, shape: ShapeSpec) -> dict:
+    b = shape.global_batch
+    # cache length = seq_len for attention archs; SSM/hybrid states are
+    # O(1) in seq_len by construction (ring buffers / recurrent state)
+    cache = cache_specs(cfg, model, b, shape.seq_len)
+    out = {"token": SDS((b,), jnp.int32),
+           "cache": cache,
+           "pos": SDS((), jnp.int32)}
+    return out
+
+
+def input_specs(cfg: ModelConfig, model: Model, shape_name: str) -> dict:
+    """All abstract inputs for one (arch x shape) cell."""
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_batch_specs(cfg, shape)}
+    if shape.kind == "decode":
+        return decode_specs(cfg, model, shape)
+    raise ValueError(shape.kind)
+
+
+def abstract_params(cfg: ModelConfig, model: Model):
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def abstract_opt_state(opt, params_sds):
+    return jax.eval_shape(opt.init, params_sds)

@@ -1,0 +1,58 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch musicgen-large \
+      --smoke --steps 50 --batch 8 --seq 128
+
+--smoke uses the reduced same-family config (CPU-runnable); omit it on a
+real TPU slice to train the full config on make_production_mesh().
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config on local devices")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--quant", default=None,
+                    help="override quant mode: none|bc|bbp|bbp_det")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh", default="none",
+                    choices=["none", "host", "production", "multipod"])
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.configs.smoke import smoke_config
+    from repro.launch.mesh import make_host_mesh, make_production_mesh
+    from repro.train.trainer import TrainConfig, Trainer
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.quant:
+        cfg = cfg.scaled(quant=args.quant)
+    mesh = None
+    if args.mesh == "host":
+        mesh = make_host_mesh()
+    elif args.mesh == "production":
+        mesh = make_production_mesh()
+    elif args.mesh == "multipod":
+        mesh = make_production_mesh(multi_pod=True)
+
+    tc = TrainConfig(steps=args.steps, global_batch=args.batch,
+                     seq_len=args.seq, lr=args.lr, accum=args.accum,
+                     ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+    trainer = Trainer(cfg, tc, mesh=mesh)
+    out = trainer.run()
+    print(json.dumps(out, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Model zoo: unified transformer (dense/moe/audio/vlm), Mamba, RG-LRU
+hybrid, and the paper's own MLP/CNN experiment nets."""
+from repro.models.api import Model, get_model, param_count
+
+__all__ = ["Model", "get_model", "param_count"]

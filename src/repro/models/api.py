@@ -1,0 +1,82 @@
+"""Family-dispatching model API used by the launcher / trainer / server.
+
+    model = get_model(cfg)
+    params = model.init(key)
+    loss, metrics = model.loss(params, batch, key=key)
+    logits, cache = model.prefill(params, tokens, ...)
+    logits, cache = model.decode(params, token, cache, pos)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm_lm
+from repro.models import transformer as T
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[[Array], Any]
+    loss: Callable[..., tuple[Array, dict]]
+    logits: Callable[..., tuple[Array, dict]]
+    prefill: Callable[..., tuple[Array, Any]]
+    decode: Callable[..., tuple[Array, Any]]
+    init_cache: Callable[..., Any]
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "audio", "vlm"):
+        return Model(
+            cfg=cfg,
+            init=lambda key: T.init_transformer_params(key, cfg),
+            loss=lambda p, batch, key=None: T.transformer_loss(
+                p, cfg, batch, key=key),
+            logits=lambda p, tokens, **kw: T.transformer_logits(
+                p, cfg, tokens, **kw),
+            prefill=lambda p, tokens, **kw: T.transformer_prefill(
+                p, cfg, tokens, **kw),
+            decode=lambda p, token, cache, pos: T.transformer_decode(
+                p, cfg, token, cache, pos),
+            init_cache=lambda batch, max_len: T.init_cache(cfg, batch, max_len),
+        )
+    if fam == "ssm":
+        return Model(
+            cfg=cfg,
+            init=lambda key: ssm_lm.init_mamba_params(key, cfg),
+            loss=lambda p, batch, key=None: ssm_lm.mamba_loss(
+                p, cfg, batch, key=key),
+            logits=lambda p, tokens, **kw: ssm_lm.mamba_logits(
+                p, cfg, tokens, **{k: v for k, v in kw.items()
+                                   if k in ("train", "key")}),
+            prefill=lambda p, tokens, **kw: ssm_lm.mamba_prefill(p, cfg, tokens),
+            decode=lambda p, token, cache, pos: ssm_lm.mamba_decode(
+                p, cfg, token, cache, pos),
+            init_cache=lambda batch, max_len: ssm_lm.mamba_init_state(cfg, batch),
+        )
+    if fam == "hybrid":
+        return Model(
+            cfg=cfg,
+            init=lambda key: ssm_lm.init_rg_params(key, cfg),
+            loss=lambda p, batch, key=None: ssm_lm.rg_loss(p, cfg, batch, key=key),
+            logits=lambda p, tokens, **kw: ssm_lm.rg_logits(
+                p, cfg, tokens, **{k: v for k, v in kw.items()
+                                   if k in ("train", "key")}),
+            prefill=lambda p, tokens, **kw: ssm_lm.rg_prefill(p, cfg, tokens),
+            decode=lambda p, token, cache, pos: ssm_lm.rg_decode(
+                p, cfg, token, cache, pos),
+            init_cache=lambda batch, max_len: ssm_lm.rg_init_state(cfg, batch),
+        )
+    raise ValueError(f"unknown family {fam!r}")
+
+
+def param_count(params) -> int:
+    return sum(int(jnp.size(x)) for x in jax.tree.leaves(params))

@@ -1,0 +1,199 @@
+"""Blockwise (flash-style) attention in pure JAX with a custom VJP.
+
+Needed so the 32k/500k-sequence cells never materialize an (S, T) score
+matrix: the forward scans over KV chunks with an online softmax, the
+backward recomputes per chunk. Supports causal masking, sliding-window
+(local) attention, GQA head grouping, and cross-attention (no mask).
+
+Shapes: q (B, S, Hq, d); k, v (B, T, Hkv, d); Hq = Hkv * G.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def _chunk_mask(qpos: Array, kpos: Array, causal: bool, window: int) -> Array:
+    """(S, C) boolean validity mask for one kv chunk."""
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        m &= qpos[:, None] - kpos[None, :] < window
+    return m
+
+
+def _attn_fwd_impl(q, k, v, *, causal: bool, window: int, chunk: int,
+                   q_offset: int):
+    b, s, hq, d = q.shape
+    _, t, hkv, _ = k.shape
+    g = hq // hkv
+    dt = q.dtype  # big chunk tensors stay in the compute dtype (bf16 on
+    # TPU); only the softmax statistics and the accumulator are f32 —
+    # halves the attention HBM traffic (EXPERIMENTS.md §Perf)
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    qf = (q.astype(jnp.float32) * scale).astype(dt).transpose(0, 2, 1, 3)
+    qf = qf.reshape(b, hkv, g, s, d)
+    kc = k.transpose(0, 2, 1, 3)                                # (B,Hkv,T,d)
+    vc = v.transpose(0, 2, 1, 3)
+    n_chunks = (t + chunk - 1) // chunk
+    pad = n_chunks * chunk - t
+    if pad:
+        kc = jnp.pad(kc, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vc = jnp.pad(vc, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kc = kc.reshape(b, hkv, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+    vc = vc.reshape(b, hkv, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+    qpos = jnp.arange(s) + q_offset
+
+    def body(carry, inp):
+        m_run, l_run, acc = carry
+        idx, kj, vj = inp
+        kpos = idx * chunk + jnp.arange(chunk)
+        valid = _chunk_mask(qpos, kpos, causal, window) & (kpos < t)[None, :]
+        sc = jnp.einsum("bhgsd,bhcd->bhgsc", qf, kj,
+                        preferred_element_type=jnp.float32)
+        sc = jnp.where(valid[None, None, None], sc, NEG_INF)
+        m_new = jnp.maximum(m_run, sc.max(-1))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(sc - m_new[..., None])
+        l_new = l_run * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgsc,bhcd->bhgsd", p.astype(dt), vj,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc), None
+
+    init = (jnp.full((b, hkv, g, s), NEG_INF, jnp.float32),
+            jnp.zeros((b, hkv, g, s), jnp.float32),
+            jnp.zeros((b, hkv, g, s, d), jnp.float32))
+    (m_f, l_f, acc), _ = jax.lax.scan(
+        body, init, (jnp.arange(n_chunks), kc, vc))
+    l_safe = jnp.where(l_f > 0, l_f, 1.0)
+    out = (acc / l_safe[..., None]).reshape(b, hq, s, d).transpose(0, 2, 1, 3)
+    lse = (m_f + jnp.log(l_safe)).reshape(b, hq, s)
+    return out.astype(q.dtype), lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q: Array, k: Array, v: Array, causal: bool = True,
+                    window: int = 0, chunk: int = 512,
+                    q_offset: int = 0) -> Array:
+    out, _ = _attn_fwd_impl(q, k, v, causal=causal, window=window,
+                            chunk=chunk, q_offset=q_offset)
+    return out
+
+
+def _fa_fwd(q, k, v, causal, window, chunk, q_offset):
+    out, lse = _attn_fwd_impl(q, k, v, causal=causal, window=window,
+                              chunk=chunk, q_offset=q_offset)
+    return out, (q, k, v, out, lse)
+
+
+def _fa_bwd(causal, window, chunk, q_offset, res, dout):
+    q, k, v, out, lse = res
+    b, s, hq, d = q.shape
+    _, t, hkv, _ = k.shape
+    g = hq // hkv
+    dt = q.dtype
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    qf = q.transpose(0, 2, 1, 3).reshape(b, hkv, g, s, d)
+    do = dout.astype(dt).transpose(0, 2, 1, 3).reshape(b, hkv, g, s, d)
+    of = out.transpose(0, 2, 1, 3).reshape(b, hkv, g, s, d)
+    lsef = lse.reshape(b, hkv, g, s)
+    delta = jnp.einsum("bhgsd,bhgsd->bhgs", do, of,
+                       preferred_element_type=jnp.float32)
+    kc = k.transpose(0, 2, 1, 3)
+    vc = v.transpose(0, 2, 1, 3)
+    n_chunks = (t + chunk - 1) // chunk
+    pad = n_chunks * chunk - t
+    if pad:
+        kc = jnp.pad(kc, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vc = jnp.pad(vc, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kc = kc.reshape(b, hkv, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+    vc = vc.reshape(b, hkv, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+    qpos = jnp.arange(s) + q_offset
+
+    def body(dq, inp):
+        idx, kj, vj = inp
+        kpos = idx * chunk + jnp.arange(chunk)
+        valid = _chunk_mask(qpos, kpos, causal, window) & (kpos < t)[None, :]
+        sc = jnp.einsum("bhgsd,bhcd->bhgsc", qf, kj,
+                        preferred_element_type=jnp.float32) * scale
+        p = jnp.where(valid[None, None, None],
+                      jnp.exp(sc - lsef[..., None]), 0.0)
+        pb = p.astype(dt)
+        dv_j = jnp.einsum("bhgsc,bhgsd->bhcd", pb, do,
+                          preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bhgsd,bhcd->bhgsc", do, vj,
+                        preferred_element_type=jnp.float32)
+        ds = (p * (dp - delta[..., None])).astype(dt)
+        dq = dq + jnp.einsum("bhgsc,bhcd->bhgsd", ds, kj,
+                             preferred_element_type=jnp.float32) * scale
+        dk_j = jnp.einsum("bhgsc,bhgsd->bhcd", ds, qf,
+                          preferred_element_type=jnp.float32) * scale
+        return dq, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((b, hkv, g, s, d), jnp.float32)
+    dq, (dk_st, dv_st) = jax.lax.scan(
+        body, dq0, (jnp.arange(n_chunks), kc, vc))
+    dq = dq.reshape(b, hq, s, d).transpose(0, 2, 1, 3).astype(q.dtype)
+    # dk_st: (n_chunks, B, Hkv, chunk, d) -> (B, Hkv, T, d)
+    dk = dk_st.transpose(1, 2, 0, 3, 4).reshape(b, hkv, n_chunks * chunk, d)
+    dv = dv_st.transpose(1, 2, 0, 3, 4).reshape(b, hkv, n_chunks * chunk, d)
+    dk = dk[:, :, :t].transpose(0, 2, 1, 3).astype(k.dtype)
+    dv = dv[:, :, :t].transpose(0, 2, 1, 3).astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+def attention_ref(q: Array, k: Array, v: Array, *, causal: bool = True,
+                  window: int = 0, q_offset: int = 0) -> Array:
+    """Naive O(S*T) oracle for tests."""
+    b, s, hq, d = q.shape
+    _, t, hkv, _ = k.shape
+    g = hq // hkv
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    qf = q.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(b, hkv, g, s, d)
+    kf = k.astype(jnp.float32).transpose(0, 2, 1, 3)
+    vf = v.astype(jnp.float32).transpose(0, 2, 1, 3)
+    sc = jnp.einsum("bhgsd,bhtd->bhgst", qf, kf) * scale
+    qpos = jnp.arange(s) + q_offset
+    kpos = jnp.arange(t)
+    m = _chunk_mask(qpos, kpos, causal, window)
+    sc = jnp.where(m[None, None, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhgst,bhtd->bhgsd", p, vf)
+    return out.reshape(b, hq, s, d).transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def decode_attention(q: Array, k_cache: Array, v_cache: Array,
+                     cache_len: Array, *, window: int = 0) -> Array:
+    """Single-token decode attention against a cache.
+
+    q: (B, 1, Hq, d); caches: (B, T_max, Hkv, d); cache_len: scalar or (B,)
+    number of valid positions (the new token is already written at
+    cache_len-1). Masks out positions >= cache_len and outside the window.
+    """
+    b, t, hkv, d = k_cache.shape
+    hq = q.shape[2]
+    g = hq // hkv
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, d)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    sc = jnp.einsum("bhgd,bthd->bhgt", qf, kf) * scale
+    pos = jnp.arange(t)
+    length = jnp.asarray(cache_len).reshape(-1, 1)  # (B or 1, 1)
+    valid = pos[None, :] < length
+    if window > 0:
+        valid &= pos[None, :] >= (length - window)
+    sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhgt,bthd->bhgd", p, vf)
+    return out.reshape(b, 1, hq, d).astype(q.dtype)

@@ -1,0 +1,179 @@
+"""Shared model components: norms, RoPE, FFN variants, MoE sublayer.
+
+All projections route through repro.core.layers.qmatmul, so the paper's
+quantization (NONE / BC / BBP / BBP_DET) is a config switch on every
+architecture (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layers import QuantMode, qmatmul
+from repro.launch.shardctx import hint_ffn_hidden
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (1.0 + scale)).astype(x.dtype)
+
+
+def layer_norm(x: Array, scale: Array, bias: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+    return ((xf - mean) * jax.lax.rsqrt(var + eps) * scale + bias).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """x: (B, S, H, d) with even d; positions: (S,) or (B, S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        ang = positions[:, None].astype(jnp.float32) * freqs[None, :]  # (S, half)
+        ang = ang[None, :, None, :]
+    else:
+        ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,half)
+        ang = ang[:, :, None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(positions: Array, d: int) -> Array:
+    """MusicGen-style sinusoidal position embedding. positions: (S,)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / half)
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# FFN variants
+# ---------------------------------------------------------------------------
+def ffn(params: dict, x: Array, kind: str, mode: QuantMode, *,
+        train: bool = False, key: Array | None = None) -> Array:
+    """kind: 'swiglu' | 'geglu' | 'sq_relu' | 'gelu'.
+
+    swiglu/geglu params: {w_gate (D,F), w_up (D,F), w_down (F,D)}
+    sq_relu/gelu params: {w_up (D,F), w_down (F,D)}
+    """
+    keys = jax.random.split(key, 3) if key is not None else (None,) * 3
+    if kind in ("swiglu", "geglu"):
+        g = qmatmul(x, params["w_gate"], mode, train=train, key=keys[0])
+        u = qmatmul(x, params["w_up"], mode, train=train, key=keys[1])
+        act = jax.nn.silu(g) if kind == "swiglu" else jax.nn.gelu(g)
+        h = act * u
+    elif kind == "sq_relu":
+        h = jnp.square(jax.nn.relu(
+            qmatmul(x, params["w_up"], mode, train=train, key=keys[0])))
+    elif kind == "gelu":
+        h = jax.nn.gelu(
+            qmatmul(x, params["w_up"], mode, train=train, key=keys[0]))
+    else:
+        raise ValueError(kind)
+    h = hint_ffn_hidden(h)
+    return qmatmul(h, params["w_down"], mode, train=train, key=keys[2])
+
+
+def ffn_param_shapes(d_model: int, d_ff: int, kind: str) -> dict:
+    if kind in ("swiglu", "geglu"):
+        return {"w_gate": (d_model, d_ff), "w_up": (d_model, d_ff),
+                "w_down": (d_ff, d_model)}
+    return {"w_up": (d_model, d_ff), "w_down": (d_ff, d_model)}
+
+
+# ---------------------------------------------------------------------------
+# MoE sublayer (capacity-based scatter dispatch, MaxText-style "dropping")
+# ---------------------------------------------------------------------------
+def moe_ffn(params: dict, x: Array, kind: str, mode: QuantMode, *,
+            top_k: int, capacity_factor: float = 1.25,
+            train: bool = False, key: Array | None = None) -> tuple[Array, dict]:
+    """params: {router (D,E), experts: {w_* with leading E axis}}.
+
+    x: (B, S, D). Returns (out, aux) where aux has the load-balancing loss
+    terms. Dispatch: top-k routing with per-expert capacity
+    C = ceil(T/E * cf * k); overflowing tokens are dropped (standard).
+    """
+    b, s, d = x.shape
+    t = b * s
+    router_w = params["router"]
+    e = router_w.shape[-1]
+    cap = int(max(1, (t * top_k * capacity_factor) // e))
+    xt = x.reshape(t, d)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)      # (T,k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # position of each (token, k) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)   # (T,k,E)
+    flat_oh = onehot.reshape(t * top_k, e)
+    pos_in_expert = jnp.cumsum(flat_oh, axis=0) * flat_oh - 1  # (T*k,E)
+    pos = jnp.max(pos_in_expert, axis=-1)                   # (T*k,)
+    expert = gate_idx.reshape(t * top_k)
+    keep = pos < cap
+    pos_c = jnp.where(keep, pos, 0)
+
+    # scatter tokens into (E, C, D)
+    src = jnp.repeat(xt, top_k, axis=0)                     # (T*k, D)
+    src = jnp.where(keep[:, None], src, 0)
+    # NOTE: an explicit EP constraint on this buffer was tried and REFUTED
+    # (4x compute regression — GSPMD replicated the dispatch scatter);
+    # see EXPERIMENTS.md §Perf. GSPMD's own placement is better here.
+    buf = jnp.zeros((e, cap, d), x.dtype).at[expert, pos_c].add(
+        src, mode="drop")
+
+    # expert FFN, batched over E
+    keys = jax.random.split(key, 3) if key is not None else (None,) * 3
+    ex = params["experts"]
+    if kind in ("swiglu", "geglu"):
+        g = _batched_qmm(buf, ex["w_gate"], mode, train, keys[0])
+        u = _batched_qmm(buf, ex["w_up"], mode, train, keys[1])
+        act = jax.nn.silu(g) if kind == "swiglu" else jax.nn.gelu(g)
+        h = act * u
+    else:
+        h = jnp.square(jax.nn.relu(_batched_qmm(buf, ex["w_up"], mode, train, keys[0])))
+    out_buf = _batched_qmm(h, ex["w_down"], mode, train, keys[2])  # (E,C,D)
+
+    # gather back and combine with gate weights
+    gathered = out_buf[expert, pos_c]                        # (T*k, D)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    combined = (gathered.reshape(t, top_k, d)
+                * gate_vals[..., None].astype(x.dtype)).sum(axis=1)
+
+    # Switch-style load-balance aux loss
+    frac_tokens = jnp.mean(jax.nn.one_hot(gate_idx[:, 0], e), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = {"lb_loss": e * jnp.sum(frac_tokens * frac_probs),
+           "drop_frac": 1.0 - jnp.mean(keep.astype(jnp.float32))}
+    return combined.reshape(b, s, d), aux
+
+
+def _batched_qmm(x: Array, w: Array, mode: QuantMode, train, key):
+    """x: (E, C, Din), w: (E, Din, Dout) — per-expert quantized matmul."""
+    from repro.core.layers import quant_acts, quant_weights
+    kw = ka = None
+    if key is not None:
+        kw, ka = jax.random.split(key)
+    xq = quant_acts(x, mode, train=train, key=ka)
+    wq = quant_weights(w.astype(xq.dtype), mode, train=train, key=kw)
+    return jnp.einsum("ecd,edf->ecf", xq, wq)
+
+
+def moe_param_shapes(d_model: int, d_ff: int, n_experts: int, kind: str) -> dict:
+    ex = {k: (n_experts,) + v
+          for k, v in ffn_param_shapes(d_model, d_ff, kind).items()}
+    return {"router": (d_model, n_experts), "experts": ex}

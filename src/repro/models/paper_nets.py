@@ -1,0 +1,200 @@
+"""The paper's exact experiment networks (§5), faithful BBP reproduction.
+
+  * MNIST MLP: 3 binary hidden layers x 1024, L2-SVM output, square hinge
+    loss, NO batch norm (paper uses minibatch 200 instead), uniform(-1,1)
+    init, stochastic binarization of weights and neurons at train time,
+    deterministic sign at test time, weight clipping to [-1,1].
+  * CIFAR-10 / SVHN CNN: 2x(128C3)-MP2-2x(256C3)-MP2-2x(512C3)-MP2-
+    1024FC-1024FC-L2SVM with shift-based BN (minibatch 100).
+
+Forward/backward follow Algorithm 1: W_b = binarize(W); h_b =
+binarize(HT(W_b h)); STE Eq. (6) in backward. All binary matmuls/convs are
+exactly sign(x) @ sign(w) — i.e. the XNOR+popcount kernels compute them
+bit-identically (tests assert this).
+
+Differentiable params and BN running stats are SEPARATE pytrees (grads
+never touch running statistics).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.binarize import binary_act, binarize, clip_weights
+from repro.core.layers import QuantMode, qmatmul
+from repro.core.shift_bn import (
+    BNParams, BNState, batch_norm, init_bn, shift_batch_norm,
+)
+from repro.kernels.ops import binary_conv2d
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# MNIST MLP (permutation-invariant)
+# ---------------------------------------------------------------------------
+def init_mlp(key: Array, in_dim: int = 784, hidden: int = 1024,
+             n_hidden: int = 3, n_classes: int = 10) -> dict:
+    """Paper init: uniform(-1, 1) for weights and biases."""
+    dims = [in_dim] + [hidden] * n_hidden + [n_classes]
+    keys = jax.random.split(key, len(dims) - 1)
+    layers = []
+    for k, din, dout in zip(keys, dims[:-1], dims[1:]):
+        kw, kb = jax.random.split(k)
+        layers.append({
+            "w": jax.random.uniform(kw, (din, dout), jnp.float32, -1.0, 1.0),
+            "b": jax.random.uniform(kb, (dout,), jnp.float32, -1.0, 1.0),
+        })
+    return {"layers": layers}
+
+
+def mlp_forward(params: dict, x: Array, *, mode: str = "bbp",
+                train: bool = False, key: Array | None = None) -> Array:
+    """x: (B, 784) in [-1, 1]. Returns L2-SVM scores (B, 10).
+
+    mode: 'bbp' (paper), 'bc' (BinaryConnect baseline), 'float'."""
+    qm = {"bbp": QuantMode.BBP, "bc": QuantMode.BC,
+          "float": QuantMode.NONE}[mode]
+    n = len(params["layers"])
+    h = x
+    for i, lp in enumerate(params["layers"]):
+        kk = jax.random.fold_in(key, i) if key is not None else None
+        stoch = train and key is not None and mode == "bbp"
+        # the input layer consumes real-valued pixels (the paper binarizes
+        # hidden neurons only — images enter at full precision)
+        qm_i = QuantMode.BC if (qm == QuantMode.BBP and i == 0) else qm
+        pre = qmatmul(h, lp["w"], qm_i, train=train, key=kk) + lp["b"]
+        if qm != QuantMode.NONE:
+            # Fixed shift normalization: scale pre-activations by the AP2
+            # power-of-2 proxy of 1/sqrt(fan_in). A +-1 dot over fan_in has
+            # std sqrt(fan_in); without this shift every HT unit saturates
+            # and the STE (Eq. 6) kills all gradients. This is the paper's
+            # "avoid BN" configuration realized with a pure binary shift
+            # (DESIGN.md §7 deviation note).
+            from repro.core.ap2 import ap2
+            pre = pre * ap2(1.0 / jnp.sqrt(jnp.float32(lp["w"].shape[0])))
+        if i < n - 1:
+            if mode == "bbp":
+                ka = jax.random.fold_in(kk, 7) if stoch else None
+                h = binary_act(pre, stochastic=stoch, key=ka)
+            else:
+                h = jnp.clip(pre, -1.0, 1.0)  # hard-tanh nonlinearity
+        else:
+            h = pre  # L2-SVM scores
+    return h
+
+
+# ---------------------------------------------------------------------------
+# CIFAR-10 / SVHN CNN
+# ---------------------------------------------------------------------------
+CNN_WIDTHS = (128, 128, 256, 256, 512, 512)
+
+
+def init_cnn(key: Array, in_ch: int = 3, widths=CNN_WIDTHS,
+             fc: int = 1024, n_classes: int = 10, img: int = 32
+             ) -> tuple[dict, dict]:
+    """Returns (params, bn_state): learnables vs running statistics."""
+    keys = jax.random.split(key, len(widths) + 3)
+    convs, conv_bns = [], []
+    ch = in_ch
+    for k, w in zip(keys, widths):
+        bnp, bns = init_bn(w)
+        convs.append({"w": jax.random.uniform(k, (3, 3, ch, w), jnp.float32,
+                                              -1.0, 1.0), "bn": bnp})
+        conv_bns.append(bns)
+        ch = w
+    flat = (img // 8) * (img // 8) * widths[-1]
+    k1, k2, k3 = keys[-3:]
+    p1, s1 = init_bn(fc)
+    p2, s2 = init_bn(fc)
+    params = {
+        "convs": convs,
+        "fc1": {"w": jax.random.uniform(k1, (flat, fc), jnp.float32, -1, 1),
+                "bn": p1},
+        "fc2": {"w": jax.random.uniform(k2, (fc, fc), jnp.float32, -1, 1),
+                "bn": p2},
+        "out": {"w": jax.random.uniform(k3, (fc, n_classes), jnp.float32, -1, 1),
+                "b": jnp.zeros((n_classes,), jnp.float32)},
+    }
+    bn_state = {"convs": conv_bns, "fc1": s1, "fc2": s2}
+    return params, bn_state
+
+
+def cnn_forward(params: dict, bn_state: dict, x: Array, *, mode: str = "bbp",
+                train: bool = False, key: Array | None = None,
+                bn_kind: str = "shift", kernel_path: str = "ref"
+                ) -> tuple[Array, dict]:
+    """x: (B, 32, 32, 3). Returns (scores (B,10), new_bn_state).
+
+    bn_kind: 'shift' (paper's shift-BN) or 'exact'.
+    kernel_path: 'ref' | 'vpu' | 'mxu' — which binary-conv realization.
+    """
+    qm = {"bbp": QuantMode.BBP, "bc": QuantMode.BC,
+          "float": QuantMode.NONE}[mode]
+    bn_fn = shift_batch_norm if bn_kind == "shift" else batch_norm
+    new_bn: dict[str, Any] = {"convs": []}
+    h = x
+    for i, cp in enumerate(params["convs"]):
+        kk = jax.random.fold_in(key, i) if key is not None else None
+        stoch = train and key is not None and mode == "bbp"
+        if qm == QuantMode.NONE:
+            hq, wq = h, cp["w"]
+        else:
+            wq = binarize(cp["w"], stochastic=stoch, key=kk)
+            ka = jax.random.fold_in(kk, 3) if stoch else None
+            hq = binary_act(h, stochastic=stoch, key=ka) \
+                if (qm == QuantMode.BBP and i > 0) else h
+        if qm == QuantMode.BBP and i > 0:
+            # fully binary conv: all realizations share the +1-padding
+            # convention, so 'ref'/'vpu'/'mxu' are bit-identical
+            pre = binary_conv2d(hq, wq, path=kernel_path)
+        else:
+            pre = jax.lax.conv_general_dilated(
+                hq, wq.astype(hq.dtype), (1, 1), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        pre, bns_new = bn_fn(cp["bn"], bn_state["convs"][i], pre, train=train)
+        new_bn["convs"].append(bns_new)
+        h = jnp.clip(pre, -1.0, 1.0)
+        if i % 2 == 1:  # max-pool after every second conv
+            h = jax.lax.reduce_window(
+                h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+    h = h.reshape(h.shape[0], -1)
+    for j, name in enumerate(("fc1", "fc2")):
+        lp = params[name]
+        kk = jax.random.fold_in(key, 100 + j) if key is not None else None
+        stoch = train and key is not None and mode == "bbp"
+        if qm == QuantMode.BBP:
+            ka = jax.random.fold_in(kk, 5) if stoch else None
+            h = binary_act(h, stochastic=stoch, key=ka)
+        pre = qmatmul(h, lp["w"], qm, train=train, key=kk)
+        pre, bns_new = bn_fn(lp["bn"], bn_state[name], pre, train=train)
+        new_bn[name] = bns_new
+        h = jnp.clip(pre, -1.0, 1.0)
+
+    kk = jax.random.fold_in(key, 999) if key is not None else None
+    scores = qmatmul(h, params["out"]["w"], qm, train=train, key=kk) \
+        + params["out"]["b"]
+    return scores, new_bn
+
+
+# ---------------------------------------------------------------------------
+# L2-SVM square hinge loss (paper §5)
+# ---------------------------------------------------------------------------
+def square_hinge_loss(scores: Array, labels: Array, n_classes: int = 10
+                      ) -> Array:
+    """L2-SVM multi-class square hinge: targets in {-1,+1} one-vs-all."""
+    t = 2.0 * jax.nn.one_hot(labels, n_classes) - 1.0
+    margins = jnp.maximum(0.0, 1.0 - t * scores.astype(jnp.float32))
+    return jnp.mean(jnp.sum(jnp.square(margins), axis=-1))
+
+
+def clip_all_weights(params):
+    """Algorithm 1: clip(W) after every update, for weight matrices only
+    (leaves whose dict key is 'w')."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, p: clip_weights(p)
+        if any(getattr(k, "key", None) == "w" for k in path) else p,
+        params)

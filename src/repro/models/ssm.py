@@ -1,0 +1,363 @@
+"""SSM / linear-recurrence architectures: Mamba-1 (falcon-mamba-7b) and
+RG-LRU + local-attention hybrid (recurrentgemma-2b).
+
+Both are diagonal linear recurrences h_t = a_t * h_{t-1} + b_t, computed
+with a chunked associative scan: an outer lax.scan carries the boundary
+state across time-chunks, the within-chunk cumulative is a
+lax.associative_scan, and the chunk body is remat'd — peak memory is one
+chunk of states, O(L) activations never include the (L, d_inner, N) state
+tensor (DESIGN.md §5). This is what makes the 500k-token cells feasible.
+
+Quantization: in/out/gate projections route through qmatmul (the paper's
+technique); the recurrence dynamics stay fp — see DESIGN.md
+§Arch-applicability for why binarizing them is unsound.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.layers import QuantMode, qmatmul
+from repro.launch.shardctx import hint_ffn_hidden, hint_gathered
+from repro.models.attention import decode_attention, flash_attention
+from repro.models.common import (
+    ffn, ffn_param_shapes, rms_norm, rope,
+)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Chunked diagonal linear scan
+# ---------------------------------------------------------------------------
+def _seg_scan(a: Array, b: Array, h0: Array) -> Array:
+    """Cumulative h_t = a_t h_{t-1} + b_t within one chunk.
+
+    a, b: (B, Q, ...) with matching trailing dims; h0: (B, ...).
+    Returns h: (B, Q, ...)."""
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    a_cum, b_cum = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return b_cum + a_cum * h0[:, None]
+
+
+def chunked_diag_scan(a: Array, b: Array, h0: Array, chunk: int,
+                      out_fn, out_extra=None):
+    """Outer scan over time-chunks of a diagonal recurrence.
+
+    a, b: (B, L, ...) recurrence coefficients; h0: (B, ...) initial state.
+    out_fn(h_chunk, extra_chunk) -> per-chunk output (B, Q, ...); extra is
+    an optional pytree of (B, L, ...) tensors sliced alongside.
+    Returns (ys (B, L, ...), h_final)."""
+    bsz, L = a.shape[0], a.shape[1]
+    q = min(chunk, L)
+    pad = (-L) % q
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2),
+                    constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad)) + ((0, 0),) * (b.ndim - 2))
+        if out_extra is not None:
+            out_extra = jax.tree.map(
+                lambda x: jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2)),
+                out_extra)
+    nc = (L + pad) // q
+
+    def to_chunks(x):
+        return x.reshape((x.shape[0], nc, q) + x.shape[2:]).swapaxes(0, 1)
+
+    a_c, b_c = to_chunks(a), to_chunks(b)
+    extra_c = jax.tree.map(to_chunks, out_extra) if out_extra is not None else None
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def body(h, xs):
+        if extra_c is not None:
+            ac, bc, ec = xs
+        else:
+            ac, bc = xs
+            ec = None
+        hc = _seg_scan(ac, bc, h)
+        y = out_fn(hc, ec)
+        return hc[:, -1], y
+
+    xs = (a_c, b_c, extra_c) if extra_c is not None else (a_c, b_c)
+    h_fin, ys = jax.lax.scan(body, h0, xs)
+    ys = ys.swapaxes(0, 1).reshape((bsz, nc * q) + ys.shape[3:])
+    return ys[:, :L], h_fin
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv1d (the Mamba/Griffin temporal conv)
+# ---------------------------------------------------------------------------
+def causal_conv1d(x: Array, w: Array, b: Array | None,
+                  state: Array | None = None) -> tuple[Array, Array]:
+    """x: (B, L, F); w: (K, F) depthwise taps; state: (B, K-1, F) history.
+    Returns (y (B, L, F), new_state (B, K-1, F))."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(k))
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    new_state = xp[:, -(k - 1):] if k > 1 else state
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 block (falcon-mamba-7b)
+# ---------------------------------------------------------------------------
+def mamba_block_shapes(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di = cfg.expand * d
+    dtr = cfg.dt_rank or max(1, d // 16)
+    n = cfg.ssm_state
+    return {
+        "ln": {"scale": (d,)},
+        "in_proj": (d, 2 * di),
+        "conv_w": (cfg.d_conv, di),
+        "conv_b": (di,),
+        "x_proj": (di, dtr + 2 * n),
+        "dt_w": (dtr, di),
+        "dt_b": (di,),
+        "A_log": (di, n),
+        "D": (di,),
+        "out_proj": (di, d),
+    }
+
+
+def _mamba_init_block(key: Array, cfg: ModelConfig, prefix=()) -> dict:
+    shapes = mamba_block_shapes(cfg)
+    leaves, treedef = jax.tree.flatten(shapes, is_leaf=lambda x: isinstance(x, tuple))
+    keys = jax.random.split(key, len(leaves))
+    flat_paths = [p for p, _ in jax.tree_util.tree_flatten_with_path(
+        shapes, is_leaf=lambda x: isinstance(x, tuple))[0]]
+    out = []
+    for kk, shp, path in zip(keys, leaves, flat_paths):
+        name = str(path[-1])
+        full = prefix + shp
+        if "A_log" in name:
+            # S4D-real init: A = -(1..N), broadcast over channels
+            a = jnp.tile(jnp.arange(1, cfg.ssm_state + 1, dtype=jnp.float32),
+                         (shp[0], 1))
+            out.append(jnp.broadcast_to(jnp.log(a), full).copy())
+        elif "dt_b" in name:
+            # dt bias init so softplus(dt_b) ~ [1e-3, 1e-1]
+            u = jax.random.uniform(kk, full, jnp.float32,
+                                   jnp.log(1e-3), jnp.log(1e-1))
+            dt = jnp.exp(u)
+            out.append(dt + jnp.log(-jnp.expm1(-dt)))
+        elif "D" in name and len(shp) == 1:
+            out.append(jnp.ones(full, jnp.float32))
+        elif len(shp) >= 2:
+            out.append(jax.random.normal(kk, full, jnp.float32) * 0.02)
+        else:
+            out.append(jnp.zeros(full, jnp.float32))
+    return jax.tree.unflatten(treedef, out)
+
+
+def init_mamba_params(key: Array, cfg: ModelConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    blocks = jax.vmap(lambda k: _mamba_init_block(k, cfg))(
+        jax.random.split(k1, cfg.n_layers))
+    params = {
+        "embed": jax.random.normal(k2, (cfg.vocab, cfg.d_model), jnp.float32) * 0.02,
+        "blocks": blocks,
+        "final_norm": {"scale": jnp.zeros((cfg.d_model,), jnp.float32)},
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(
+            k3, (cfg.d_model, cfg.vocab), jnp.float32) * 0.02
+    return params
+
+
+def _mamba_ssm_coeffs(bp: dict, x: Array, cfg: ModelConfig,
+                      mode: QuantMode, train, key):
+    """Shared by scan and step: from conv output x (B,L,di) compute
+    (a (B,L,di,N), bx (B,L,di,N), C (B,L,N))."""
+    dtr = cfg.dt_rank or max(1, cfg.d_model // 16)
+    n = cfg.ssm_state
+    dbc = qmatmul(x, bp["x_proj"], mode, train=train, key=key)
+    dt_lr, bmat, cmat = jnp.split(dbc, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("blr,rd->bld", dt_lr.astype(jnp.float32),
+                   bp["dt_w"].astype(jnp.float32)) + bp["dt_b"])
+    a_mat = -jnp.exp(bp["A_log"].astype(jnp.float32))           # (di, N)
+    a = jnp.exp(dt[..., None] * a_mat)                          # (B,L,di,N)
+    bx = (dt * x.astype(jnp.float32))[..., None] * \
+        bmat.astype(jnp.float32)[:, :, None, :]                 # (B,L,di,N)
+    return a, bx, cmat.astype(jnp.float32)
+
+
+def _mamba_chunk_scan(bp: dict, dt: Array, xi: Array, bmat: Array,
+                      cmat: Array, chunk: int) -> tuple[Array, Array]:
+    """Selective scan with coefficients built INSIDE the remat'd chunk
+    body: only (B, L, di) / (B, L, N) tensors ever hit HBM; the
+    (B, Q, di, N) recurrence coefficients exist one chunk at a time.
+    (Materializing a/bx for the full L was the dominant memory-roofline
+    term on falcon-mamba — 16x the residual stream. EXPERIMENTS.md §Perf.)
+    Returns (y (B, L, di), h_final (B, di, N))."""
+    bsz, L, di = dt.shape
+    n = bmat.shape[-1]
+    q = min(chunk, L)
+    pad = (-L) % q
+    if pad:
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))  # dt=0 => a=1, bx=0
+        xi = jnp.pad(xi, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    nc = (L + pad) // q
+
+    def to_chunks(x):
+        return x.reshape((bsz, nc, q) + x.shape[2:]).swapaxes(0, 1)
+
+    a_mat = -jnp.exp(bp["A_log"].astype(jnp.float32))  # (di, N)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def body(h, xs):
+        dt_c, xi_c, b_c, c_c = xs
+
+        # SEQUENTIAL time loop inside the remat'd chunk: per-step state is
+        # (B, di, N) only. lax.associative_scan here materializes O(log Q)
+        # full (B, Q, di, N) tree levels to HBM — measured 16x the whole
+        # model's traffic on falcon-mamba (EXPERIMENTS.md §Perf). On real
+        # TPU the Pallas selective-scan kernel (repro.kernels.selective_scan)
+        # replaces this loop with h held in VMEM.
+        def step(h, xs_t):
+            dt_t, xi_t, b_t, c_t = xs_t               # (B,di),(B,di),(B,N)x2
+            a = jnp.exp(dt_t[..., None] * a_mat)      # (B,di,N)
+            h = a * h + (dt_t * xi_t.astype(jnp.float32))[..., None] * \
+                b_t[:, None, :]
+            y_t = jnp.einsum("bdn,bn->bd", h, c_t)
+            return h, y_t
+
+        h, y = jax.lax.scan(
+            step, h, (dt_c.swapaxes(0, 1), xi_c.swapaxes(0, 1),
+                      b_c.swapaxes(0, 1), c_c.swapaxes(0, 1)))
+        return h, y.swapaxes(0, 1)
+
+    h0 = jnp.zeros((bsz, di, n), jnp.float32)
+    h_fin, ys = jax.lax.scan(
+        body, h0, (to_chunks(dt), to_chunks(xi), to_chunks(bmat),
+                   to_chunks(cmat)))
+    ys = ys.swapaxes(0, 1).reshape(bsz, nc * q, di)
+    return ys[:, :L], h_fin
+
+
+def mamba_block(bp: dict, x: Array, cfg: ModelConfig, mode: QuantMode, *,
+                train: bool, key, chunk: int = 256,
+                return_state: bool = False):
+    """Full-sequence Mamba block. x: (B, L, D)."""
+    keys = jax.random.split(key, 3) if key is not None else (None,) * 3
+    xn = hint_gathered(rms_norm(x, bp["ln"]["scale"]))
+    xz = hint_ffn_hidden(
+        qmatmul(xn, bp["in_proj"], mode, train=train, key=keys[0]))
+    xi_pre, z = jnp.split(xz, 2, axis=-1)
+    xi, conv_state = causal_conv1d(xi_pre, bp["conv_w"], bp["conv_b"])
+    xi = jax.nn.silu(xi)
+    dtr = cfg.dt_rank or max(1, cfg.d_model // 16)
+    n = cfg.ssm_state
+    dbc = qmatmul(xi, bp["x_proj"], mode, train=train, key=keys[1])
+    dt_lr, bmat, cmat = jnp.split(dbc, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("blr,rd->bld", dt_lr.astype(jnp.float32),
+                   bp["dt_w"].astype(jnp.float32)) + bp["dt_b"])
+    y, h_fin = _mamba_chunk_scan(bp, dt, xi, bmat.astype(jnp.float32),
+                                 cmat.astype(jnp.float32), chunk)
+    y = (y + bp["D"] * xi.astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = x + qmatmul(y, bp["out_proj"], mode, train=train, key=keys[2])
+    if return_state:
+        return out, (conv_state, h_fin)
+    return out
+
+
+def mamba_block_step(bp: dict, x: Array, conv_state: Array, h: Array,
+                     cfg: ModelConfig, mode: QuantMode
+                     ) -> tuple[Array, Array, Array]:
+    """Single-token step. x: (B, 1, D); conv_state: (B, K-1, di);
+    h: (B, di, N). Returns (y (B,1,D), new conv_state, new h)."""
+    xn = rms_norm(x, bp["ln"]["scale"])
+    xz = qmatmul(xn, bp["in_proj"], mode)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi, conv_state = causal_conv1d(xi, bp["conv_w"], bp["conv_b"], conv_state)
+    xi = jax.nn.silu(xi)
+    a, bx, cmat = _mamba_ssm_coeffs(bp, xi, cfg, mode, False, None)
+    h = a[:, 0] * h + bx[:, 0]                                  # (B,di,N)
+    y = jnp.einsum("bdn,bn->bd", h, cmat[:, 0])[:, None]
+    y = (y + bp["D"] * xi.astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return x + qmatmul(y, bp["out_proj"], mode), conv_state, h
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block (recurrentgemma-2b, Griffin)
+# ---------------------------------------------------------------------------
+RG_C = 8.0
+
+
+def rglru_block_shapes(cfg: ModelConfig) -> dict:
+    d, w = cfg.d_model, cfg.lru_width or cfg.d_model
+    return {
+        "ln": {"scale": (d,)},
+        "w_x": (d, w), "w_gate": (d, w),
+        "conv_w": (cfg.d_conv, w), "conv_b": (w,),
+        "w_input_gate": (w, w), "b_input_gate": (w,),
+        "w_rec_gate": (w, w), "b_rec_gate": (w,),
+        "lam": (w,),
+        "w_out": (w, d),
+    }
+
+
+def _rglru_coeffs(bp: dict, xi: Array):
+    """xi: (B, L, W) conv output -> recurrence (a, b) both (B, L, W)."""
+    xf = xi.astype(jnp.float32)
+    i_gate = jax.nn.sigmoid(
+        jnp.einsum("blw,wv->blv", xf, bp["w_input_gate"].astype(jnp.float32))
+        + bp["b_input_gate"])
+    r_gate = jax.nn.sigmoid(
+        jnp.einsum("blw,wv->blv", xf, bp["w_rec_gate"].astype(jnp.float32))
+        + bp["b_rec_gate"])
+    log_a = -RG_C * jax.nn.softplus(bp["lam"]) * r_gate
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) * (i_gate * xf)
+    return a, b
+
+
+def rglru_block(bp: dict, x: Array, cfg: ModelConfig, mode: QuantMode, *,
+                train: bool, key, chunk: int = 256,
+                return_state: bool = False):
+    """Recurrent temporal-mix sublayer. x: (B, L, D)."""
+    keys = jax.random.split(key, 3) if key is not None else (None,) * 3
+    xn = hint_gathered(rms_norm(x, bp["ln"]["scale"]))
+    xi = hint_ffn_hidden(
+        qmatmul(xn, bp["w_x"], mode, train=train, key=keys[0]))
+    gate = jax.nn.gelu(qmatmul(xn, bp["w_gate"], mode, train=train, key=keys[1]))
+    xi, conv_state = causal_conv1d(xi, bp["conv_w"], bp["conv_b"])
+    a, b = _rglru_coeffs(bp, xi)
+    h0 = jnp.zeros((x.shape[0], a.shape[-1]), jnp.float32)
+    y, h_fin = chunked_diag_scan(a, b, h0, chunk, lambda hc, _: hc)
+    y = y.astype(x.dtype) * gate
+    out = x + qmatmul(y, bp["w_out"], mode, train=train, key=keys[2])
+    if return_state:
+        return out, (conv_state, h_fin)
+    return out
+
+
+def rglru_block_step(bp: dict, x: Array, conv_state: Array, h: Array,
+                     cfg: ModelConfig, mode: QuantMode
+                     ) -> tuple[Array, Array, Array]:
+    xn = rms_norm(x, bp["ln"]["scale"])
+    xi = qmatmul(xn, bp["w_x"], mode)
+    gate = jax.nn.gelu(qmatmul(xn, bp["w_gate"], mode))
+    xi, conv_state = causal_conv1d(xi, bp["conv_w"], bp["conv_b"], conv_state)
+    a, b = _rglru_coeffs(bp, xi)
+    h = a[:, 0] * h + b[:, 0]
+    y = h[:, None].astype(x.dtype) * gate
+    return x + qmatmul(y, bp["w_out"], mode), conv_state, h

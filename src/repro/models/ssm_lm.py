@@ -1,0 +1,374 @@
+"""Full LMs over the SSM blocks: falcon-mamba-7b (pure Mamba stack) and
+recurrentgemma-2b (RG-LRU / RG-LRU / local-attn pattern + GeGLU MLPs).
+
+Both support train logits, prefill, and O(1)-state decode — which is what
+makes them the `long_500k` archs.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.layers import QuantMode, qmatmul
+from repro.models.attention import decode_attention, flash_attention
+from repro.launch.shardctx import (hint_attn_q, hint_ffn_hidden, hint_gathered, hint_residual)
+from repro.models.common import ffn, ffn_param_shapes, rms_norm, rope
+from repro.models.ssm import (
+    causal_conv1d, mamba_block, mamba_block_step, init_mamba_params,
+    rglru_block, rglru_block_step, rglru_block_shapes,
+)
+from repro.models.transformer import (
+    _init_from_shapes, _self_attn_shapes, _norm_shapes,
+)
+
+Array = jax.Array
+
+
+# ===========================================================================
+# falcon-mamba-7b
+# ===========================================================================
+def mamba_logits(params: dict, cfg: ModelConfig, tokens: Array, *,
+                 train: bool = False, key: Array | None = None
+                 ) -> tuple[Array, dict]:
+    mode = QuantMode(cfg.quant)
+    h = params["embed"][tokens].astype(cfg.activation_dtype)
+
+    def body(carry, bp):
+        h, idx = carry
+        kk = jax.random.fold_in(key, idx) if key is not None else None
+        h = mamba_block(bp, h, cfg, mode, train=train, key=kk)
+        return (hint_residual(h), idx + 1), None
+
+    if cfg.remat and train:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (h, _), _ = jax.lax.scan(body, (h, 0), params["blocks"])
+    h = rms_norm(h, params["final_norm"]["scale"])
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bsd,dv->bsv", h, w.astype(h.dtype)), {}
+
+
+def mamba_loss(params: dict, cfg: ModelConfig, batch: dict, *,
+               key: Array | None = None) -> tuple[Array, dict]:
+    logits, _ = mamba_logits(params, cfg, batch["tokens"], train=True, key=key)
+    logits = logits[:, :-1].astype(jnp.float32)
+    targets = batch["tokens"][:, 1:]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - gold).mean()
+    return nll, {"nll": nll}
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int) -> dict:
+    di = cfg.expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.d_conv - 1, di),
+                          cfg.activation_dtype),
+        "h": jnp.zeros((cfg.n_layers, batch, di, cfg.ssm_state), jnp.float32),
+    }
+
+
+def mamba_prefill(params: dict, cfg: ModelConfig, tokens: Array
+                  ) -> tuple[Array, dict]:
+    mode = QuantMode(cfg.quant)
+    h = params["embed"][tokens].astype(cfg.activation_dtype)
+
+    def body(h, bp):
+        h, (conv_s, h_fin) = mamba_block(bp, h, cfg, mode, train=False,
+                                         key=None, return_state=True)
+        return h, (conv_s, h_fin)
+
+    h, (conv_states, h_states) = jax.lax.scan(body, h, params["blocks"])
+    hn = rms_norm(h[:, -1:], params["final_norm"]["scale"])
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", hn, w.astype(hn.dtype))[:, 0]
+    return logits, {"conv": conv_states, "h": h_states}
+
+
+def mamba_decode(params: dict, cfg: ModelConfig, token: Array, cache: dict,
+                 pos: Array) -> tuple[Array, dict]:
+    mode = QuantMode(cfg.quant)
+    h = params["embed"][token[:, None]].astype(cfg.activation_dtype)
+
+    def body(h, xs):
+        bp, conv_s, hs = xs
+        h, conv_s, hs = mamba_block_step(bp, h, conv_s, hs, cfg, mode)
+        return h, (conv_s, hs)
+
+    h, (conv_states, h_states) = jax.lax.scan(
+        body, h, (params["blocks"], cache["conv"], cache["h"]))
+    hn = rms_norm(h, params["final_norm"]["scale"])
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", hn, w.astype(hn.dtype))[:, 0]
+    return logits, {"conv": conv_states, "h": h_states}
+
+
+# ===========================================================================
+# recurrentgemma-2b (Griffin): groups of (rec, rec, local-attn), each layer
+# followed by a GeGLU MLP sublayer; tail of leftover rec layers.
+# ===========================================================================
+def _rg_layer_shapes(cfg: ModelConfig, kind: str) -> dict:
+    s: dict[str, Any] = {"ln2": _norm_shapes(cfg),
+                         "ffn": ffn_param_shapes(cfg.d_model, cfg.d_ff, cfg.mlp)}
+    if kind == "rec":
+        s["mix"] = rglru_block_shapes(cfg)
+    else:
+        s["mix"] = {"ln1": _norm_shapes(cfg), "attn": _self_attn_shapes(cfg)}
+    return s
+
+
+def rg_layout(cfg: ModelConfig) -> tuple[int, int]:
+    """(n_groups, n_tail_rec): groups of the repeating pattern + leftover
+    recurrent layers."""
+    pat = cfg.block_pattern or ("rec", "rec", "attn")
+    n_groups = cfg.n_layers // len(pat)
+    n_tail = cfg.n_layers - n_groups * len(pat)
+    return n_groups, n_tail
+
+
+def init_rg_params(key: Array, cfg: ModelConfig) -> dict:
+    g, tail = rg_layout(cfg)
+    pat = cfg.block_pattern or ("rec", "rec", "attn")
+    n_rec_per_group = sum(1 for p in pat if p == "rec")
+    keys = jax.random.split(key, 6)
+    params = {
+        "embed": jax.random.normal(keys[0], (cfg.vocab, cfg.d_model),
+                                   jnp.float32) * 0.02,
+        "groups": {
+            "rec": _init_from_shapes(keys[1], _rg_layer_shapes(cfg, "rec"),
+                                     prefix_axes=(g, n_rec_per_group)),
+            "attn": _init_from_shapes(keys[2], _rg_layer_shapes(cfg, "attn"),
+                                      prefix_axes=(g,)),
+        },
+        "final_norm": {"scale": jnp.zeros((cfg.d_model,), jnp.float32)},
+    }
+    if tail:
+        params["tail"] = _init_from_shapes(
+            keys[3], _rg_layer_shapes(cfg, "rec"), prefix_axes=(tail,))
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(
+            keys[4], (cfg.d_model, cfg.vocab), jnp.float32) * 0.02
+    return params
+
+
+def _rg_mlp(lp: dict, x: Array, cfg: ModelConfig, mode: QuantMode, *,
+            train: bool, key) -> Array:
+    xn = hint_gathered(rms_norm(x, lp["ln2"]["scale"]))
+    return x + ffn(lp["ffn"], xn, cfg.mlp, mode, train=train, key=key)
+
+
+def _rg_attn_mix(lp: dict, x: Array, cfg: ModelConfig, mode: QuantMode, *,
+                 train: bool, key, pos_offset: int = 0,
+                 return_kv: bool = False):
+    xn = hint_gathered(rms_norm(x, lp["mix"]["ln1"]["scale"]))
+    keys = jax.random.split(key, 4) if key is not None else (None,) * 4
+    b, s, _ = xn.shape
+    ap = lp["mix"]["attn"]
+    q = qmatmul(xn, ap["wq"], mode, train=train, key=keys[0])
+    k = qmatmul(xn, ap["wk"], mode, train=train, key=keys[1])
+    v = qmatmul(xn, ap["wv"], mode, train=train, key=keys[2])
+    q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    positions = jnp.arange(s) + pos_offset
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = hint_attn_q(q)
+    out = flash_attention(q, k, v, True, cfg.local_window, cfg.attn_chunk,
+                          pos_offset)
+    out = out.reshape(b, s, cfg.n_heads * cfg.head_dim)
+    y = x + qmatmul(out, ap["wo"], mode, train=train, key=keys[3])
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def rg_logits(params: dict, cfg: ModelConfig, tokens: Array, *,
+              train: bool = False, key: Array | None = None
+              ) -> tuple[Array, dict]:
+    mode = QuantMode(cfg.quant)
+    h = params["embed"][tokens].astype(cfg.activation_dtype)
+
+    def group_body(carry, gp):
+        h, idx = carry
+        kk = jax.random.fold_in(key, idx) if key is not None else None
+
+        def rec_body(carry2, rp):
+            h2, j = carry2
+            kj = jax.random.fold_in(kk, j) if kk is not None else None
+            k1, k2 = jax.random.split(kj) if kj is not None else (None, None)
+            h2 = rglru_block(rp["mix"], h2, cfg, mode, train=train, key=k1)
+            h2 = _rg_mlp(rp, h2, cfg, mode, train=train, key=k2)
+            return (hint_residual(h2), j + 1), None
+
+        (h, _), _ = jax.lax.scan(rec_body, (h, 0), gp["rec"])
+        ka = jax.random.fold_in(kk, 99) if kk is not None else None
+        k1, k2 = jax.random.split(ka) if ka is not None else (None, None)
+        h = _rg_attn_mix(gp["attn"], h, cfg, mode, train=train, key=k1)
+        h = _rg_mlp(gp["attn"], h, cfg, mode, train=train, key=k2)
+        return (hint_residual(h), idx + 1), None
+
+    body = group_body
+    if cfg.remat and train:
+        body = jax.checkpoint(group_body, prevent_cse=False)
+    (h, _), _ = jax.lax.scan(body, (h, 0), params["groups"])
+
+    if "tail" in params:
+        def tail_body(carry, rp):
+            h2, j = carry
+            kj = jax.random.fold_in(key, 1000 + j) if key is not None else None
+            k1, k2 = jax.random.split(kj) if kj is not None else (None, None)
+            h2 = rglru_block(rp["mix"], h2, cfg, mode, train=train, key=k1)
+            h2 = _rg_mlp(rp, h2, cfg, mode, train=train, key=k2)
+            return (h2, j + 1), None
+
+        tb = jax.checkpoint(tail_body, prevent_cse=False) \
+            if (cfg.remat and train) else tail_body
+        (h, _), _ = jax.lax.scan(tb, (h, 0), params["tail"])
+
+    h = rms_norm(h, params["final_norm"]["scale"])
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bsd,dv->bsv", h, w.astype(h.dtype)), {}
+
+
+def rg_loss(params: dict, cfg: ModelConfig, batch: dict, *,
+            key: Array | None = None) -> tuple[Array, dict]:
+    logits, _ = rg_logits(params, cfg, batch["tokens"], train=True, key=key)
+    logits = logits[:, :-1].astype(jnp.float32)
+    targets = batch["tokens"][:, 1:]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - gold).mean()
+    return nll, {"nll": nll}
+
+
+def rg_init_state(cfg: ModelConfig, batch: int) -> dict:
+    g, tail = rg_layout(cfg)
+    pat = cfg.block_pattern or ("rec", "rec", "attn")
+    n_rec = sum(1 for p in pat if p == "rec")
+    w = cfg.lru_width or cfg.d_model
+    wnd = cfg.local_window
+    return {
+        "rec_conv": jnp.zeros((g, n_rec, batch, cfg.d_conv - 1, w),
+                              cfg.activation_dtype),
+        "rec_h": jnp.zeros((g, n_rec, batch, w), jnp.float32),
+        "attn_k": jnp.zeros((g, batch, wnd, cfg.n_kv_heads, cfg.head_dim),
+                            cfg.activation_dtype),
+        "attn_v": jnp.zeros((g, batch, wnd, cfg.n_kv_heads, cfg.head_dim),
+                            cfg.activation_dtype),
+        "tail_conv": jnp.zeros((tail, batch, cfg.d_conv - 1, w),
+                               cfg.activation_dtype),
+        "tail_h": jnp.zeros((tail, batch, w), jnp.float32),
+    }
+
+
+def rg_prefill(params: dict, cfg: ModelConfig, tokens: Array
+               ) -> tuple[Array, dict]:
+    """Full forward; extracts rec states and ring-buffered window KV."""
+    mode = QuantMode(cfg.quant)
+    b, s = tokens.shape
+    wnd = cfg.local_window
+    h = params["embed"][tokens].astype(cfg.activation_dtype)
+
+    def ring_pack(k):  # (B,S,kv,hd) -> (B,W,kv,hd) ring at slot t % W
+        w_eff = min(s, wnd)
+        last = k[:, s - w_eff:]
+        slots = (jnp.arange(s - w_eff, s)) % wnd
+        buf = jnp.zeros((b, wnd) + k.shape[2:], k.dtype)
+        return buf.at[:, slots].set(last)
+
+    def group_body(h, gp):
+        def rec_body(h2, rp):
+            h2, (cs, hf) = rglru_block(rp["mix"], h2, cfg, mode, train=False,
+                                       key=None, return_state=True)
+            h2 = _rg_mlp(rp, h2, cfg, mode, train=False, key=None)
+            return h2, (cs, hf)
+
+        h, (rec_cs, rec_hs) = jax.lax.scan(rec_body, h, gp["rec"])
+        h, (k, v) = _rg_attn_mix(gp["attn"], h, cfg, mode, train=False,
+                                 key=None, return_kv=True)
+        h = _rg_mlp(gp["attn"], h, cfg, mode, train=False, key=None)
+        return h, (rec_cs, rec_hs, ring_pack(k), ring_pack(v))
+
+    h, (rcs, rhs, ks, vs) = jax.lax.scan(group_body, h, params["groups"])
+
+    cache = {"rec_conv": rcs, "rec_h": rhs, "attn_k": ks, "attn_v": vs}
+    if "tail" in params:
+        def tail_body(h2, rp):
+            h2, (cs, hf) = rglru_block(rp["mix"], h2, cfg, mode, train=False,
+                                       key=None, return_state=True)
+            h2 = _rg_mlp(rp, h2, cfg, mode, train=False, key=None)
+            return h2, (cs, hf)
+
+        h, (tcs, ths) = jax.lax.scan(tail_body, h, params["tail"])
+        cache["tail_conv"], cache["tail_h"] = tcs, ths
+    else:
+        st = rg_init_state(cfg, b)
+        cache["tail_conv"], cache["tail_h"] = st["tail_conv"], st["tail_h"]
+
+    hn = rms_norm(h[:, -1:], params["final_norm"]["scale"])
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", hn, w.astype(hn.dtype))[:, 0]
+    return logits, cache
+
+
+def rg_decode(params: dict, cfg: ModelConfig, token: Array, cache: dict,
+              pos: Array) -> tuple[Array, dict]:
+    mode = QuantMode(cfg.quant)
+    wnd = cfg.local_window
+    h = params["embed"][token[:, None]].astype(cfg.activation_dtype)
+    slot = pos % wnd
+    cache_len = jnp.minimum(pos + 1, wnd)
+
+    def group_body(h, xs):
+        gp, rcs, rhs, kc, vc = xs
+
+        def rec_body(h2, xs2):
+            rp, cs, hf = xs2
+            h2, cs, hf = rglru_block_step(rp["mix"], h2, cs, hf, cfg, mode)
+            h2 = _rg_mlp(rp, h2, cfg, mode, train=False, key=None)
+            return h2, (cs, hf)
+
+        h, (rcs, rhs) = jax.lax.scan(rec_body, h, (gp["rec"], rcs, rhs))
+
+        # local attention against the ring buffer
+        ap = gp["attn"]["mix"]["attn"]
+        xn = rms_norm(h, gp["attn"]["mix"]["ln1"]["scale"])
+        b = h.shape[0]
+        q = qmatmul(xn, ap["wq"], mode).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+        k = qmatmul(xn, ap["wk"], mode).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+        v = qmatmul(xn, ap["wv"], mode).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+        positions = jnp.full((1,), pos)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, slot, 0, 0))
+        out = decode_attention(q, kc, vc, cache_len)
+        out = out.reshape(b, 1, cfg.n_heads * cfg.head_dim)
+        h = h + qmatmul(out, ap["wo"], mode)
+        h = _rg_mlp(gp["attn"], h, cfg, mode, train=False, key=None)
+        return h, (rcs, rhs, kc, vc)
+
+    h, (rcs, rhs, ks, vs) = jax.lax.scan(
+        group_body, h,
+        (params["groups"], cache["rec_conv"], cache["rec_h"],
+         cache["attn_k"], cache["attn_v"]))
+    new_cache = dict(cache, rec_conv=rcs, rec_h=rhs, attn_k=ks, attn_v=vs)
+
+    if "tail" in params:
+        def tail_body(h2, xs2):
+            rp, cs, hf = xs2
+            h2, cs, hf = rglru_block_step(rp["mix"], h2, cs, hf, cfg, mode)
+            h2 = _rg_mlp(rp, h2, cfg, mode, train=False, key=None)
+            return h2, (cs, hf)
+
+        h, (tcs, ths) = jax.lax.scan(
+            tail_body, h, (params["tail"], cache["tail_conv"], cache["tail_h"]))
+        new_cache["tail_conv"], new_cache["tail_h"] = tcs, ths
+
+    hn = rms_norm(h, params["final_norm"]["scale"])
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", hn, w.astype(hn.dtype))[:, 0]
+    return logits, new_cache

@@ -1,0 +1,450 @@
+"""Unified decoder-only transformer covering the dense / moe / audio / vlm
+assigned architectures.
+
+Features, all config-driven (repro.configs.base.ModelConfig):
+  * GQA attention (n_kv_heads < n_heads), optional QKV bias (qwen2)
+  * RoPE or sinusoidal positions, RMSNorm or LayerNorm
+  * FFN: SwiGLU / GeGLU / squared-ReLU / GELU
+  * MoE FFN (top-k, capacity-based dispatch) — llama4-scout, dbrx
+  * Interleaved cross-attention groups (llama-3.2-vision); the vision
+    frontend is a stub: forward takes precomputed patch embeddings
+  * The paper's quantization (BBP / BC / STE) on every projection
+  * lax.scan over stacked layer params (+ optional remat) so the HLO stays
+    small at 80-95 layers
+  * prefill / single-token decode with a sharded KV cache
+
+Params are plain pytrees (dicts of jnp arrays); layer params carry a
+leading L (or group) axis for scanning.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.layers import QuantMode, qmatmul
+from repro.models.attention import decode_attention, flash_attention
+from repro.launch.shardctx import (hint_attn_q, hint_ffn_hidden, hint_gathered, hint_residual)
+from repro.models.common import (
+    ffn, ffn_param_shapes, layer_norm, moe_ffn, moe_param_shapes, rms_norm,
+    rope, sinusoidal_pos,
+)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _norm_shapes(cfg: ModelConfig) -> dict:
+    if cfg.norm == "layernorm":
+        return {"scale": (cfg.d_model,), "bias": (cfg.d_model,)}
+    return {"scale": (cfg.d_model,)}
+
+
+def _self_attn_shapes(cfg: ModelConfig) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s = {"wq": (d, h * hd), "wk": (d, kv * hd), "wv": (d, kv * hd),
+         "wo": (h * hd, d)}
+    if cfg.qkv_bias:
+        s.update({"bq": (h * hd,), "bk": (kv * hd,), "bv": (kv * hd,)})
+    return s
+
+
+def _cross_attn_shapes(cfg: ModelConfig) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dv = cfg.d_vision or d
+    return {"wq": (d, h * hd), "wk": (dv, kv * hd), "wv": (dv, kv * hd),
+            "wo": (h * hd, d), "gate": (1,)}
+
+
+def _block_shapes(cfg: ModelConfig, kind: str) -> dict:
+    s: dict[str, Any] = {"ln1": _norm_shapes(cfg), "ln2": _norm_shapes(cfg)}
+    if kind == "self":
+        s["attn"] = _self_attn_shapes(cfg)
+    elif kind == "cross":
+        s["attn"] = _cross_attn_shapes(cfg)
+    else:
+        raise ValueError(kind)
+    if cfg.n_experts:
+        s["ffn"] = moe_param_shapes(cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.mlp)
+    else:
+        s["ffn"] = ffn_param_shapes(cfg.d_model, cfg.d_ff, cfg.mlp)
+    return s
+
+
+def _init_from_shapes(key: Array, shapes, scale: float = 0.02,
+                      prefix_axes: tuple[int, ...] = ()):
+    """Initialize a pytree of arrays from a matching pytree of shape tuples."""
+    leaves, treedef = jax.tree.flatten(shapes, is_leaf=lambda x: isinstance(x, tuple))
+    keys = jax.random.split(key, len(leaves))
+    inits = []
+    for k, shp in zip(keys, leaves):
+        full = prefix_axes + shp
+        if len(shp) >= 2:  # weight matrix
+            inits.append(jax.random.normal(k, full, jnp.float32) * scale)
+        else:              # bias / norm scale / gate -> zeros
+            inits.append(jnp.zeros(full, jnp.float32))
+    return jax.tree.unflatten(treedef, inits)
+
+
+def init_transformer_params(key: Array, cfg: ModelConfig) -> dict:
+    keys = jax.random.split(key, 6)
+    params: dict[str, Any] = {
+        "embed": jax.random.normal(keys[0], (cfg.vocab, cfg.d_model),
+                                   jnp.float32) * 0.02,
+        "final_norm": _init_from_shapes(keys[1], _norm_shapes(cfg)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(
+            keys[2], (cfg.d_model, cfg.vocab), jnp.float32) * 0.02
+    if cfg.family == "vlm":
+        g = cfg.n_layers // cfg.xattn_group
+        p_self = cfg.xattn_group - 1
+        params["groups"] = {
+            "cross": _init_from_shapes(keys[3], _block_shapes(cfg, "cross"),
+                                       prefix_axes=(g,)),
+            "self": _init_from_shapes(keys[4], _block_shapes(cfg, "self"),
+                                      prefix_axes=(g, p_self)),
+        }
+    else:
+        params["blocks"] = _init_from_shapes(
+            keys[3], _block_shapes(cfg, "self"), prefix_axes=(cfg.n_layers,))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Norm dispatch
+# ---------------------------------------------------------------------------
+def _norm(p: dict, x: Array, cfg: ModelConfig) -> Array:
+    if cfg.norm == "layernorm":
+        return layer_norm(x, 1.0 + p["scale"], p["bias"])
+    return rms_norm(x, p["scale"])
+
+
+# ---------------------------------------------------------------------------
+# Sublayers
+# ---------------------------------------------------------------------------
+def _qkv(p: dict, xn: Array, cfg: ModelConfig, mode: QuantMode, train, key):
+    keys = jax.random.split(key, 3) if key is not None else (None,) * 3
+    b, s, _ = xn.shape
+    q = qmatmul(xn, p["wq"], mode, train=train, key=keys[0])
+    k = qmatmul(xn, p["wk"], mode, train=train, key=keys[1])
+    v = qmatmul(xn, p["wv"], mode, train=train, key=keys[2])
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def self_attn(p: dict, x: Array, cfg: ModelConfig, mode: QuantMode, *,
+              train: bool, key, window: int = 0, pos_offset: int = 0,
+              return_kv: bool = False):
+    xn = hint_gathered(_norm(p["ln1"], x, cfg))
+    kq, ko = jax.random.split(key) if key is not None else (None, None)
+    q, k, v = _qkv(p["attn"], xn, cfg, mode, train, kq)
+    if cfg.pos == "rope":
+        positions = jnp.arange(x.shape[1]) + pos_offset
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = hint_attn_q(q)
+    out = flash_attention(q, k, v, True, window, cfg.attn_chunk, pos_offset)
+    out = out.reshape(x.shape[0], x.shape[1], cfg.n_heads * cfg.head_dim)
+    out = hint_ffn_hidden(out)
+    out = qmatmul(out, p["attn"]["wo"], mode, train=train, key=ko)
+    y = x + hint_residual(out)
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def cross_attn(p: dict, x: Array, img: Array, cfg: ModelConfig,
+               mode: QuantMode, *, train: bool, key):
+    """mllama-style gated cross-attention against precomputed image tokens."""
+    xn = hint_gathered(_norm(p["ln1"], x, cfg))
+    keys = jax.random.split(key, 4) if key is not None else (None,) * 4
+    b, s, _ = xn.shape
+    ni = img.shape[1]
+    q = qmatmul(xn, p["attn"]["wq"], mode, train=train, key=keys[0])
+    k = qmatmul(img, p["attn"]["wk"], mode, train=train, key=keys[1])
+    v = qmatmul(img, p["attn"]["wv"], mode, train=train, key=keys[2])
+    q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, ni, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, ni, cfg.n_kv_heads, cfg.head_dim)
+    out = flash_attention(q, k, v, False, 0, cfg.attn_chunk, 0)
+    out = out.reshape(b, s, cfg.n_heads * cfg.head_dim)
+    out = qmatmul(out, p["attn"]["wo"], mode, train=train, key=keys[3])
+    gate = jnp.tanh(p["attn"]["gate"]).astype(out.dtype)
+    return x + gate * out
+
+
+def ffn_sublayer(p: dict, x: Array, cfg: ModelConfig, mode: QuantMode, *,
+                 train: bool, key):
+    xn = hint_gathered(_norm(p["ln2"], x, cfg))
+    if cfg.n_experts:
+        out, aux = moe_ffn(p["ffn"], xn, cfg.mlp, mode, top_k=cfg.top_k,
+                           capacity_factor=cfg.capacity_factor,
+                           train=train, key=key)
+    else:
+        out, aux = ffn(p["ffn"], xn, cfg.mlp, mode, train=train, key=key), {}
+    return x + hint_residual(out), aux
+
+
+def _self_block(p: dict, x: Array, cfg: ModelConfig, mode: QuantMode, *,
+                train: bool, key, window: int = 0, pos_offset: int = 0,
+                return_kv: bool = False):
+    k1, k2 = jax.random.split(key) if key is not None else (None, None)
+    res = self_attn(p, x, cfg, mode, train=train, key=k1, window=window,
+                    pos_offset=pos_offset, return_kv=return_kv)
+    x, kv = res if return_kv else (res, None)
+    x, aux = ffn_sublayer(p, x, cfg, mode, train=train, key=k2)
+    return x, kv, aux
+
+
+# ---------------------------------------------------------------------------
+# Full forward (training / scoring): tokens -> logits
+# ---------------------------------------------------------------------------
+def _embed(params: dict, cfg: ModelConfig, tokens: Array) -> Array:
+    h = params["embed"][tokens].astype(cfg.activation_dtype)
+    if cfg.pos == "sinusoidal":
+        pe = sinusoidal_pos(jnp.arange(tokens.shape[1]), cfg.d_model)
+        h = h + pe[None].astype(h.dtype)
+    return h
+
+
+def _head(params: dict, cfg: ModelConfig, h: Array) -> Array:
+    h = _norm(params["final_norm"], h, cfg)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bsd,dv->bsv", h, w.astype(h.dtype))
+
+
+def transformer_logits(params: dict, cfg: ModelConfig, tokens: Array, *,
+                       img_emb: Array | None = None, train: bool = False,
+                       key: Array | None = None) -> tuple[Array, dict]:
+    mode = QuantMode(cfg.quant)
+    h = _embed(params, cfg, tokens)
+    window = cfg.local_window
+
+    if cfg.family == "vlm":
+        assert img_emb is not None, "vlm forward needs image embeddings"
+        img = img_emb.astype(h.dtype)
+        g = cfg.n_layers // cfg.xattn_group
+
+        def group_body(carry, xs):
+            h, aux_sum, idx = carry
+            gp = xs
+            kk = jax.random.fold_in(key, idx) if key is not None else None
+            kc, ks = jax.random.split(kk) if kk is not None else (None, None)
+            h = cross_attn(gp["cross"], h, img, cfg, mode, train=train, key=kc)
+            h, aux = ffn_sublayer(gp["cross"], h, cfg, mode, train=train,
+                                  key=ks)
+            h = hint_residual(h)
+            aux_sum += aux.get("lb_loss", 0.0)
+
+            def self_body(carry2, sp):
+                h2, j = carry2
+                kj = jax.random.fold_in(kk, j) if kk is not None else None
+                h2, _, aux2 = _self_block(sp, h2, cfg, mode, train=train,
+                                          key=kj, window=window)
+                return (hint_residual(h2), j + 1), aux2.get("lb_loss", 0.0)
+
+            (h, _), auxs = jax.lax.scan(self_body, (h, 0), gp["self"])
+            return (h, aux_sum + auxs.sum(), idx + 1), None
+
+        body = group_body
+        if cfg.remat and train:
+            body = jax.checkpoint(group_body, prevent_cse=False)
+        (h, lb, _), _ = jax.lax.scan(body, (h, jnp.float32(0), 0),
+                                     params["groups"])
+        aux = {"lb_loss": lb}
+    else:
+        def block_body(carry, bp):
+            h, aux_sum, idx = carry
+            kk = jax.random.fold_in(key, idx) if key is not None else None
+            h, _, aux = _self_block(bp, h, cfg, mode, train=train, key=kk,
+                                    window=_layer_window(cfg, idx))
+            return (hint_residual(h), aux_sum + aux.get("lb_loss", 0.0),
+                    idx + 1), None
+
+        body = block_body
+        if cfg.remat and train:
+            body = jax.checkpoint(block_body, prevent_cse=False)
+        (h, lb, _), _ = jax.lax.scan(body, (h, jnp.float32(0), 0),
+                                     params["blocks"])
+        aux = {"lb_loss": lb}
+
+    return _head(params, cfg, h), aux
+
+
+def _layer_window(cfg: ModelConfig, idx) -> int:
+    # uniform-stack transformers: every layer same window (0 = global)
+    return cfg.local_window
+
+
+def transformer_loss(params: dict, cfg: ModelConfig, batch: dict, *,
+                     key: Array | None = None) -> tuple[Array, dict]:
+    """Next-token cross-entropy. batch: {tokens (B,S), [img_emb]}."""
+    tokens = batch["tokens"]
+    logits, aux = transformer_logits(params, cfg, tokens,
+                                     img_emb=batch.get("img_emb"),
+                                     train=True, key=key)
+    logits = logits[:, :-1].astype(jnp.float32)
+    targets = tokens[:, 1:]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - gold).mean()
+    loss = nll + 0.01 * aux.get("lb_loss", 0.0)
+    return loss, {"nll": nll, **aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with KV cache
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    dt = cfg.activation_dtype
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    if cfg.family == "vlm":
+        g = cfg.n_layers // cfg.xattn_group
+        p_self = cfg.xattn_group - 1
+        return {
+            "k": jnp.zeros((g, p_self, batch, max_len, kv, hd), dt),
+            "v": jnp.zeros((g, p_self, batch, max_len, kv, hd), dt),
+            # cross-attn KV is computed once from image tokens at prefill
+            "xk": jnp.zeros((g, batch, cfg.n_img_tokens, kv, hd), dt),
+            "xv": jnp.zeros((g, batch, cfg.n_img_tokens, kv, hd), dt),
+        }
+    n = cfg.n_layers
+    return {"k": jnp.zeros((n, batch, max_len, kv, hd), dt),
+            "v": jnp.zeros((n, batch, max_len, kv, hd), dt)}
+
+
+def transformer_prefill(params: dict, cfg: ModelConfig, tokens: Array, *,
+                        img_emb: Array | None = None, max_len: int | None = None
+                        ) -> tuple[Array, dict]:
+    """Run the prompt, return (last-position logits (B,V), cache)."""
+    mode = QuantMode(cfg.quant)
+    b, s = tokens.shape
+    max_len = max_len or s
+    h = _embed(params, cfg, tokens)
+    window = cfg.local_window
+
+    def pad_t(x):  # (B,S,kv,hd) -> (B,T,kv,hd)
+        return jnp.pad(x, ((0, 0), (0, max_len - s), (0, 0), (0, 0)))
+
+    if cfg.family == "vlm":
+        img = img_emb.astype(h.dtype)
+
+        def group_body(h, gp):
+            # cache cross KV
+            ni = img.shape[1]
+            xk = qmatmul(img, gp["cross"]["attn"]["wk"], mode)
+            xv = qmatmul(img, gp["cross"]["attn"]["wv"], mode)
+            xk = xk.reshape(b, ni, cfg.n_kv_heads, cfg.head_dim)
+            xv = xv.reshape(b, ni, cfg.n_kv_heads, cfg.head_dim)
+            h = cross_attn(gp["cross"], h, img, cfg, mode, train=False, key=None)
+            h, _ = ffn_sublayer(gp["cross"], h, cfg, mode, train=False, key=None)
+
+            def self_body(h2, sp):
+                h2, kvp, _ = _self_block(sp, h2, cfg, mode, train=False,
+                                         key=None, window=window,
+                                         return_kv=True)
+                return h2, (pad_t(kvp[0]), pad_t(kvp[1]))
+
+            h, (ks, vs) = jax.lax.scan(self_body, h, gp["self"])
+            return h, (ks, vs, xk, xv)
+
+        h, (ks, vs, xks, xvs) = jax.lax.scan(group_body, h, params["groups"])
+        cache = {"k": ks, "v": vs, "xk": xks, "xv": xvs}
+    else:
+        def block_body(h, bp):
+            h, kvp, _ = _self_block(bp, h, cfg, mode, train=False, key=None,
+                                    window=window, return_kv=True)
+            return h, (pad_t(kvp[0]), pad_t(kvp[1]))
+
+        h, (ks, vs) = jax.lax.scan(block_body, h, params["blocks"])
+        cache = {"k": ks, "v": vs}
+
+    logits = _head(params, cfg, h[:, -1:])[:, 0]
+    return logits, cache
+
+
+def _decode_self_block(bp, h, kc, vc, cfg, mode, pos, window):
+    """One-token self-attn block against cache. h: (B,1,D)."""
+    b = h.shape[0]
+    xn = _norm(bp["ln1"], h, cfg)
+    q, k_new, v_new = _qkv(bp["attn"], xn, cfg, mode, False, None)
+    if cfg.pos == "rope":
+        positions = jnp.full((1,), pos)
+        q = rope(q, positions, cfg.rope_theta)
+        k_new = rope(k_new, positions, cfg.rope_theta)
+    kc = jax.lax.dynamic_update_slice(kc, k_new.astype(kc.dtype),
+                                      (0, pos, 0, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v_new.astype(vc.dtype),
+                                      (0, pos, 0, 0))
+    out = decode_attention(q, kc, vc, pos + 1, window=window)
+    out = out.reshape(b, 1, cfg.n_heads * cfg.head_dim)
+    h = h + qmatmul(out, bp["attn"]["wo"], mode)
+    h, _ = ffn_sublayer(bp, h, cfg, mode, train=False, key=None)
+    return h, kc, vc
+
+
+def transformer_decode(params: dict, cfg: ModelConfig, token: Array,
+                       cache: dict, pos: Array) -> tuple[Array, dict]:
+    """One decode step. token: (B,) int32; pos: scalar int32 (current write
+    position = number of tokens already in cache). Returns (logits (B,V),
+    updated cache)."""
+    mode = QuantMode(cfg.quant)
+    h = params["embed"][token[:, None]].astype(cfg.activation_dtype)
+    if cfg.pos == "sinusoidal":
+        pe = sinusoidal_pos(jnp.full((1,), pos), cfg.d_model)
+        h = h + pe[None].astype(h.dtype)
+    window = cfg.local_window
+
+    if cfg.family == "vlm":
+        def group_body(h, xs):
+            gp, xk, xv, kcs, vcs = xs
+            # cross-attn from cached image KV
+            xn = _norm(gp["cross"]["ln1"], h, cfg)
+            q = qmatmul(xn, gp["cross"]["attn"]["wq"], mode)
+            q = q.reshape(h.shape[0], 1, cfg.n_heads, cfg.head_dim)
+            out = decode_attention(q, xk, xv, xk.shape[1])
+            out = out.reshape(h.shape[0], 1, cfg.n_heads * cfg.head_dim)
+            gate = jnp.tanh(gp["cross"]["attn"]["gate"]).astype(out.dtype)
+            h = h + gate * qmatmul(out, gp["cross"]["attn"]["wo"], mode)
+            h, _ = ffn_sublayer(gp["cross"], h, cfg, mode, train=False, key=None)
+
+            def self_body(h2, xs2):
+                sp, kc, vc = xs2
+                h2, kc, vc = _decode_self_block(sp, h2, kc, vc, cfg, mode,
+                                                pos, window)
+                return h2, (kc, vc)
+
+            h, (kcs, vcs) = jax.lax.scan(self_body, h,
+                                         (gp["self"], kcs, vcs))
+            return h, (kcs, vcs)
+
+        h, (ks, vs) = jax.lax.scan(
+            group_body, h,
+            (params["groups"], cache["xk"], cache["xv"], cache["k"],
+             cache["v"]))
+        new_cache = {"k": ks, "v": vs, "xk": cache["xk"], "xv": cache["xv"]}
+    else:
+        def block_body(h, xs):
+            bp, kc, vc = xs
+            h, kc, vc = _decode_self_block(bp, h, kc, vc, cfg, mode, pos,
+                                           window)
+            return h, (kc, vc)
+
+        h, (ks, vs) = jax.lax.scan(block_body, h,
+                                   (params["blocks"], cache["k"], cache["v"]))
+        new_cache = {"k": ks, "v": vs}
+
+    logits = _head(params, cfg, h)[:, 0]
+    return logits, new_cache

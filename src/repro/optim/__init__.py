@@ -1,0 +1,11 @@
+"""Optimizers: paper's shift-based AdaMax + baselines + 1-bit compression."""
+from repro.optim.base import Optimizer, OptState, apply_updates
+from repro.optim.shift_adamax import shift_adamax, adamax
+from repro.optim.adamw import adamw, sgd
+from repro.optim.ef_signsgd import ef_signsgd_compress, EFState
+
+__all__ = [
+    "Optimizer", "OptState", "apply_updates",
+    "shift_adamax", "adamax", "adamw", "sgd",
+    "ef_signsgd_compress", "EFState",
+]

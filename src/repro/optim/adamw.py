@@ -1,0 +1,70 @@
+"""AdamW + SGD baselines for the LM-scale configs."""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer
+
+
+class AdamWState(NamedTuple):
+    m: any
+    v: any
+    step: jax.Array
+
+
+def adamw(lr: float | Callable, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.asarray(lr))
+
+    def init(params):
+        return AdamWState(
+            m=jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params),
+            v=jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    def update(grads, state, params):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state.m, grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state.v, grads)
+        lr_t = lr_fn(step)
+        mc = 1 - b1 ** t
+        vc = 1 - b2 ** t
+
+        def upd(m_, v_, p):
+            adam = (m_ / mc) / (jnp.sqrt(v_ / vc) + eps)
+            return -lr_t * (adam + weight_decay * p.astype(jnp.float32))
+
+        updates = jax.tree.map(upd, m, v, params)
+        return updates, AdamWState(m=m, v=v, step=step)
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(lr: float | Callable, momentum: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.asarray(lr))
+
+    def init(params):
+        mom = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params) \
+            if momentum else None
+        return (mom, jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params=None):
+        mom, step = state
+        step = step + 1
+        if momentum:
+            mom = jax.tree.map(lambda b, g: momentum * b + g.astype(jnp.float32),
+                               mom, grads)
+            eff = mom
+        else:
+            eff = grads
+        updates = jax.tree.map(lambda g: -lr_fn(step) * g.astype(jnp.float32), eff)
+        return updates, (mom, step)
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,55 @@
+"""Minimal functional optimizer interface (optax-style, no optax dep).
+
+An Optimizer is (init, update):
+    state = init(params)
+    updates, state = update(grads, state, params)
+    params = apply_updates(params, updates)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+OptState = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], OptState]
+    update: Callable[[Any, OptState, Any], tuple[Any, OptState]]
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda g: g * scale, tree), norm
+
+
+def chain_weight_clip(opt: Optimizer, lo: float = -1.0, hi: float = 1.0,
+                      predicate=None) -> Optimizer:
+    """Wrap an optimizer so updated params are clipped into [lo, hi]
+    (paper Algorithm 1's clip(W - dW)). `predicate(path)` may restrict the
+    clip to binarized weight leaves."""
+    def update(grads, state, params):
+        updates, state = opt.update(grads, state, params)
+
+        def clip_update(path, p, u):
+            if predicate is not None and not predicate(path):
+                return u
+            return jnp.clip(p + u, lo, hi) - p
+
+        flat_u = jax.tree_util.tree_map_with_path(clip_update, params, updates)
+        return flat_u, state
+
+    return Optimizer(init=opt.init, update=update)

@@ -1,0 +1,88 @@
+"""AdaMax and the paper's shift-based AdaMax (S-AdaMax, §3.4).
+
+AdaMax (Kingma & Ba):
+    m_t = b1 m + (1-b1) g
+    u_t = max(b2 u, |g|)
+    w  -= (lr / (1 - b1^t)) * m_t / u_t
+
+S-AdaMax constrains every multiplicative factor to a power of two:
+    * the learning rate is snapped to AP2 (and decayed by right-shifts),
+    * the per-parameter scaling 1/u_t is replaced by AP2(1/u_t) — a shift.
+No momentum-bias-correction multiply is exempted: (1-b1^t) is folded into
+the AP2 learning-rate proxy. No weight decay, no classic momentum (paper).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ap2 import ap2
+from repro.optim.base import Optimizer
+
+
+class AdaMaxState(NamedTuple):
+    m: any
+    u: any
+    step: jax.Array
+
+
+def _init_like(params):
+    return AdaMaxState(
+        m=jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params),
+        u=jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def adamax(lr: float | Callable[[jax.Array], jax.Array], b1: float = 0.9,
+           b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    """Exact AdaMax baseline."""
+    lr_fn = lr if callable(lr) else (lambda step: jnp.asarray(lr))
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state.m, grads)
+        u = jax.tree.map(lambda u_, g: jnp.maximum(b2 * u_, jnp.abs(g.astype(jnp.float32))),
+                         state.u, grads)
+        scale = lr_fn(step) / (1 - b1 ** step.astype(jnp.float32))
+        updates = jax.tree.map(lambda m_, u_: -scale * m_ / (u_ + eps), m, u)
+        return updates, AdaMaxState(m=m, u=u, step=step)
+
+    return Optimizer(init=_init_like, update=update)
+
+
+def shift_adamax(lr: float | Callable[[jax.Array], jax.Array], b1: float = 0.9,
+                 b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    """The paper's S-AdaMax: all scalings are AP2 power-of-2 shifts."""
+    lr_fn = lr if callable(lr) else (lambda step: jnp.asarray(lr))
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state.m, grads)
+        u = jax.tree.map(lambda u_, g: jnp.maximum(b2 * u_, jnp.abs(g.astype(jnp.float32))),
+                         state.u, grads)
+        # lr (incl. bias correction) snapped to a single power-of-2 shift
+        scale = ap2(lr_fn(step) / (1 - b1 ** step.astype(jnp.float32)))
+        # 1/u replaced by its AP2 proxy => per-parameter shift, not divide
+        updates = jax.tree.map(
+            lambda m_, u_: -scale * m_ * ap2(1.0 / (u_ + eps)), m, u)
+        return updates, AdaMaxState(m=m, u=u, step=step)
+
+    return Optimizer(init=_init_like, update=update)
+
+
+def shift_lr_schedule(base_lr: float, halve_every: int) -> Callable:
+    """Paper §5: lr starts at an AP2-rounded Glorot value and is shifted
+    right (x0.5) every `halve_every` steps — always an exact power of two."""
+    import numpy as np
+    base = float(np.exp2(np.round(np.log2(base_lr))))
+
+    def schedule(step: jax.Array) -> jax.Array:
+        shifts = (step // halve_every).astype(jnp.float32)
+        return jnp.asarray(base) * jnp.exp2(-shifts)
+
+    return schedule

@@ -1,0 +1,321 @@
+"""HLO cost model: parse post-GSPMD per-device HLO and compute
+scan-corrected FLOPs, HBM traffic, and collective bytes.
+
+Why not compiled.cost_analysis()? XLA counts each `while` BODY ONCE,
+so anything inside a lax.scan (our layer stacks, microbatch accumulation,
+flash-attention chunk loops) is undercounted by its trip count. The HLO
+text carries backend_config={"known_trip_count":{"n":...}} on every
+counted loop, so we rebuild the cost bottom-up:
+
+  totals(computation) = sum over ops [ own cost ]
+      + trip_count * totals(while body) + totals(while cond)
+      + totals(fusion called comp)  (for dot flops inside fusions)
+      + ...
+
+Costs:
+  * flops: dot ops — 2 * prod(result dims) * contraction size
+           (elementwise flops ignored: documented, they are < few % here)
+  * hbm bytes: per top-level op, result bytes + operand bytes (a fusion is
+    one op, so intra-fusion reuse is correctly not charged)
+  * collective bytes: result bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shapes_in(s: str) -> list[tuple[str, tuple[int, ...]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(s):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+        out.append((dtype, shape))
+    return out
+
+
+def _nbytes(shape_str: str) -> int:
+    total = 0
+    for dtype, shape in _shapes_in(shape_str):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class Op:
+    name: str
+    opcode: str
+    shape_str: str
+    operands: list[str]
+    attrs: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list[Op] = field(default_factory=list)
+    symbols: dict = field(default_factory=dict)  # %name -> shape_str
+
+
+_HDR_NAME = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|[a-z0-9]+\[[\d,]*\](?:{[\d,:TSE()]*})?))\s+"
+    r"([\w\-]+)\((.*)$")
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        # computation header: "%name (args...) -> result {"  or ENTRY form
+        if s.endswith("{") and ") -> " in s and "=" not in s.split("(")[0]:
+            m = _HDR_NAME.match(s)
+            if m:
+                cur = Computation(name=m.group(1))
+                comps[cur.name] = cur
+                continue
+        if cur is None:
+            continue
+        if s == "}":
+            cur = None
+            continue
+        om = _OP_LINE.match(line)
+        if not om:
+            continue
+        name, shape_str, opcode, rest = om.groups()
+        # split operand list from attributes at the matching close paren
+        depth, idx = 1, 0
+        for idx, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        operand_str, attrs = rest[:idx], rest[idx + 1:]
+        operands = re.findall(r"%([\w.\-]+)", operand_str)
+        op = Op(name=name, opcode=opcode, shape_str=shape_str,
+                operands=operands, attrs=attrs, line=line)
+        cur.ops.append(op)
+        cur.symbols[name] = shape_str
+    return comps
+
+
+_TRIP_RE = re.compile(r'"known_trip_count":{"n":"(\d+)"')
+_CALLED_RE = re.compile(r"(?:body|condition|calls|to_apply)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations={([^}]*)}")
+_CDIMS_RE = re.compile(r"lhs_contracting_dims={([\d,]*)}")
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+# Elementwise / shape ops that the TPU backend fuses into producers or
+# consumers — they do not individually round-trip HBM. The CPU-backend HLO
+# we parse leaves them unfused, so counting them would overstate HBM
+# traffic by ~100x on elementwise-heavy graphs (binarize/STE chains).
+_FUSABLE_OPS = {
+    "convert", "multiply", "add", "subtract", "divide", "maximum",
+    "minimum", "compare", "select", "broadcast", "exponential", "tanh",
+    "rsqrt", "sqrt", "negate", "power", "and", "or", "xor", "not",
+    "log", "log-plus-one", "exponential-minus-one", "sign", "abs",
+    "floor", "ceil", "round-nearest-afz", "round-nearest-even", "clamp",
+    "reshape", "is-finite", "population-count", "shift-left",
+    "shift-right-logical", "shift-right-arithmetic", "rem", "atan2",
+    "clz", "logistic", "cbrt", "erf", "real", "imag", "map", "expm1",
+    "log1p", "cosine", "sine", "tan", "reduce-precision",
+}
+
+
+def _dot_flops(op: Op, comp: Computation) -> int:
+    """2 * prod(result) * contraction-size."""
+    res = _shapes_in(op.shape_str)
+    if not res:
+        return 0
+    _, rshape = res[0]
+    out = 1
+    for d in rshape:
+        out *= d
+    # contraction size from lhs operand shape + contracting dims
+    m = _CDIMS_RE.search(op.attrs)
+    if not m or not op.operands:
+        return 0
+    cdims = [int(x) for x in m.group(1).split(",") if x]
+    lhs_shape_str = comp.symbols.get(op.operands[0], "")
+    lhs = _shapes_in(lhs_shape_str)
+    if not lhs:
+        return 0
+    _, lshape = lhs[0]
+    k = 1
+    for d in cdims:
+        if d < len(lshape):
+            k *= lshape[d]
+    return 2 * out * k
+
+
+def analyze(text: str) -> dict:
+    """Full-module scan-corrected cost. Returns
+    {flops, hbm_bytes, collectives: {per_op, counts, total_bytes}}."""
+    comps = parse_module(text)
+    memo: dict[str, dict] = {}
+
+    def totals(cname: str) -> dict:
+        if cname in memo:
+            return memo[cname]
+        comp = comps.get(cname)
+        zero = {"flops": 0, "hbm_bytes": 0,
+                "coll": defaultdict(int), "coll_n": defaultdict(int)}
+        if comp is None:
+            memo[cname] = zero
+            return zero
+        t = {"flops": 0, "hbm_bytes": 0,
+             "coll": defaultdict(int), "coll_n": defaultdict(int)}
+        memo[cname] = t  # guard cycles
+        def absorb(sub: str, mult: int = 1, *, with_hbm: bool = True):
+            subt = totals(sub)
+            t["flops"] += mult * subt["flops"]
+            if with_hbm:
+                t["hbm_bytes"] += mult * subt["hbm_bytes"]
+            for k, v in subt["coll"].items():
+                t["coll"][k] += mult * v
+            for k, v in subt["coll_n"].items():
+                t["coll_n"][k] += mult * v
+
+        for op in comp.ops:
+            oc = op.opcode
+            # --- recurse into called computations ---
+            if oc == "while":
+                m = _TRIP_RE.search(op.attrs)
+                trip = int(m.group(1)) if m else 1
+                mb = re.search(r"body=%?([\w.\-]+)", op.attrs)
+                mc = re.search(r"condition=%?([\w.\-]+)", op.attrs)
+                if mb:
+                    absorb(mb.group(1), trip)
+                if mc:
+                    absorb(mc.group(1), trip)
+                continue
+            called = re.findall(r"(?:calls|to_apply)=%?([\w.\-]+)", op.attrs)
+            bm = _BRANCHES_RE.search(op.attrs)
+            if bm:
+                called += re.findall(r"%?([\w.\-]+)", bm.group(1))
+            for sub in called:
+                absorb(sub)
+            # --- own cost ---
+            base = oc.replace("-start", "").replace("-done", "")
+            if base in _COLLECTIVES and not oc.endswith("-done"):
+                b = _nbytes(op.shape_str)
+                t["coll"][base] += b
+                t["coll_n"][base] += 1
+            if oc in ("dot", "dot-general"):
+                t["flops"] += _dot_flops(op, comp)
+            if oc == "convolution":
+                # rough: 2 * prod(result) * (kernel elems) — adequate for
+                # the (rare) conv in these graphs
+                t["flops"] += 2 * (_nbytes(op.shape_str) // 4)
+            if oc == "fusion":
+                # operands that the fused computation only *slices*
+                # (dynamic-slice/gather of param_N — scan param stacks,
+                # embedding tables) are charged at the slice size, not the
+                # full buffer
+                sub = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+                fused = comps.get(sub.group(1)) if sub else None
+                if sub:
+                    # fused internals contribute flops/collectives but no
+                    # standalone HBM traffic (they live in registers/VMEM)
+                    absorb(sub.group(1), with_hbm=False)
+                excluded: dict[int, int] = {}
+                dus_bytes = 0
+                if fused is not None:
+                    for fop in fused.ops:
+                        if fop.opcode in ("dynamic-slice", "gather") \
+                                and fop.operands:
+                            pm = re.match(r"param_(\d+)", fop.operands[0])
+                            if pm:
+                                idx = int(pm.group(1))
+                                excluded[idx] = excluded.get(idx, 0) + \
+                                    _nbytes(fop.shape_str)
+                        if fop.opcode == "dynamic-update-slice" \
+                                and fop.operands:
+                            # in-place update of a scan-carried buffer:
+                            # traffic = the update slice, and the fusion's
+                            # result aliases the buffer (not a full write)
+                            pm = re.match(r"param_(\d+)", fop.operands[0])
+                            upd = _nbytes(fused.symbols.get(
+                                fop.operands[1], "")) \
+                                if len(fop.operands) > 1 else 0
+                            if pm:
+                                excluded[int(pm.group(1))] = upd
+                            dus_bytes += upd
+                b = dus_bytes if dus_bytes else _nbytes(op.shape_str)
+                for i, o in enumerate(op.operands):
+                    if i in excluded:
+                        b += 2 * excluded[i]
+                    else:
+                        b += _nbytes(comp.symbols.get(o, ""))
+                t["hbm_bytes"] += b
+                continue
+            if oc == "gather":
+                t["hbm_bytes"] += 2 * _nbytes(op.shape_str)
+                continue
+            if oc == "dynamic-update-slice":
+                # touches only the updated slice (in-place on TPU), not the
+                # whole buffer — charging the full operand would inflate
+                # scan-carried buffers by the trip count
+                upd = comp.symbols.get(op.operands[1], "") \
+                    if len(op.operands) > 1 else ""
+                t["hbm_bytes"] += 2 * _nbytes(upd)
+            elif oc == "dynamic-slice":
+                t["hbm_bytes"] += 2 * _nbytes(op.shape_str)
+            elif oc in _FUSABLE_OPS:
+                pass  # fused on the TPU backend; no standalone HBM trip
+            elif oc not in _SKIP_BYTES_OPS and not oc.endswith("-done"):
+                b = _nbytes(op.shape_str)
+                for o in op.operands:
+                    b += _nbytes(comp.symbols.get(o, ""))
+                t["hbm_bytes"] += b
+        return t
+
+    entry = None
+    for raw in text.splitlines():
+        if raw.startswith("ENTRY"):
+            m = re.search(r"ENTRY\s+%?([\w.\-]+)", raw)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:
+        # fall back: biggest computation
+        entry = max(comps, key=lambda c: len(comps[c].ops)) if comps else ""
+    t = totals(entry)
+    return {
+        "flops": int(t["flops"]),
+        "hbm_bytes": int(t["hbm_bytes"]),
+        "collectives": {"per_op": {k: int(v) for k, v in t["coll"].items()},
+                        "counts": dict(t["coll_n"]),
+                        "total_bytes": int(sum(t["coll"].values()))},
+    }
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Back-compat: scan-corrected collective totals."""
+    return analyze(hlo_text)["collectives"]

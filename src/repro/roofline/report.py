@@ -1,0 +1,123 @@
+"""Roofline report: dryrun_results.jsonl -> per-cell three-term roofline.
+
+    compute term    = HLO_FLOPs / (chips x 197 TF/s)
+    memory term     = HLO_bytes / (chips x 819 GB/s)
+    collective term = collective_bytes / (chips x 50 GB/s)
+
+HLO_FLOPs / bytes / collective_bytes are the SCAN-CORRECTED per-device
+numbers from repro.roofline.hlo (xla's cost_analysis counts while bodies
+once — see that module). All quantities are already per-device in the
+SPMD module, so the division by chips is implicit; we divide per-device
+quantities by per-chip peaks directly.
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) for training;
+2*N*D for single forward (prefill); 2*N_active*B per decoded token.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import SHAPES, get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Total useful model FLOPs for the step, per device."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n * shape.global_batch
+    return total
+
+
+def roofline_row(rec: dict) -> dict:
+    chips = rec["n_devices"]
+    flops_dev = rec["flops"]
+    bytes_dev = rec["bytes_accessed"]
+    coll_dev = rec["collectives"]["total_bytes"]
+    t_comp = flops_dev / PEAK_FLOPS_BF16
+    t_mem = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    mf_total = model_flops(rec["arch"], rec["shape"])
+    mf_dev = mf_total / chips
+    useful = mf_dev / flops_dev if flops_dev else 0.0
+    # roofline fraction: useful work at peak vs the dominant-term bound
+    t_bound = max(terms.values())
+    frac = (mf_dev / PEAK_FLOPS_BF16) / t_bound if t_bound else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "accum": rec.get("accum", 1),
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "bottleneck": bottleneck,
+        "model_flops_per_dev": mf_dev,
+        "useful_flops_ratio": useful,
+        "roofline_fraction": frac,
+        "temp_gb": rec["memory"].get("temp_size_in_bytes", 0) / 1e9,
+        "args_gb": rec["memory"].get("argument_size_in_bytes", 0) / 1e9,
+    }
+
+
+def load_results(path: str | Path) -> list[dict]:
+    recs = []
+    for line in Path(path).read_text().splitlines():
+        if line.strip():
+            recs.append(json.loads(line))
+    return recs
+
+
+def make_table(path: str | Path, *, multi_pod: bool | None = False) -> str:
+    """Markdown roofline table for EXPERIMENTS.md §Roofline."""
+    rows, skips = [], []
+    for rec in load_results(path):
+        if multi_pod is not None and rec.get("multi_pod") != multi_pod:
+            continue
+        if rec["status"] == "SKIP":
+            skips.append(rec)
+            continue
+        if rec["status"] != "OK":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "error": rec.get("error", "?")})
+            continue
+        rows.append(roofline_row(rec))
+
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | bottleneck "
+        "| useful/HLO | roofline frac | temp GB |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | FAIL: {r['error'][:40]} |||||||")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3f} | "
+            f"{r['t_memory_s']:.3f} | {r['t_collective_s']:.3f} | "
+            f"**{r['bottleneck']}** | {r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} | {r['temp_gb']:.1f} |")
+    for rec in skips:
+        lines.append(f"| {rec['arch']} | {rec['shape']} | SKIP — "
+                     f"{rec['reason'][:60]} |||||||")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="dryrun_results.jsonl")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    print(make_table(args.results, multi_pod=args.multi_pod))
+
+
+if __name__ == "__main__":
+    main()

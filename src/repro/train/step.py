@@ -1,0 +1,129 @@
+"""Train / serve step builders used by the trainer, server, and dry-run.
+
+The train step is Algorithm 1 at framework scale: grads through the
+binarized forward (STE), optimizer update (S-AdaMax by default for
+quantized configs), then clip(W) on every binarized projection weight.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.binarize import clip_weights
+from repro.models.api import Model
+from repro.optim import adamw, shift_adamax
+from repro.optim.base import Optimizer, apply_updates
+
+Array = jax.Array
+
+# dict keys of binarized projection weights (clipped to [-1,1] per Alg. 1)
+_CLIP_KEYS = {
+    "wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down", "in_proj",
+    "out_proj", "w_x", "w_out", "w_input_gate", "w_rec_gate", "w",
+}
+
+
+def clip_binary_weights(params):
+    def leaf(path, p):
+        keys = [getattr(k, "key", None) for k in path]
+        if any(k in _CLIP_KEYS for k in keys):
+            return clip_weights(p)
+        return p
+    return jax.tree_util.tree_map_with_path(leaf, params)
+
+
+def default_optimizer(cfg: ModelConfig, lr: float = 1e-3) -> Optimizer:
+    if cfg.quant == "none":
+        return adamw(lr, weight_decay=0.1)
+    # the paper's optimizer (power-of-2 scalings only)
+    return shift_adamax(lr)
+
+
+def make_train_step(model: Model, opt: Optimizer, *,
+                    accum: int = 1, grad_shardings=None) -> Callable:
+    """Returns train_step(params, opt_state, batch, step_key) ->
+    (params, opt_state, metrics).
+
+    accum > 1: gradient accumulation — the global batch is split into
+    `accum` microbatches scanned sequentially; activation memory scales
+    with the microbatch, gradients are averaged in fp32. Standard recipe
+    for fitting large train cells in HBM.
+    """
+    cfg = model.cfg
+    needs_key = cfg.quant == "bbp"  # stochastic binarization needs PRNG
+
+    def loss_of(p, b, key):
+        return model.loss(p, b, key=key if needs_key else None)
+
+    def constrain_grads(g):
+        # pin accumulated grads to the parameter sharding so GSPMD
+        # reduce-scatters each microbatch's contribution instead of
+        # carrying (and all-reducing) replicated full-size gradients
+        if grad_shardings is None:
+            return g
+        return jax.tree.map(jax.lax.with_sharding_constraint, g,
+                            grad_shardings)
+
+    def train_step(params, opt_state, batch, step_key):
+        if accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params, batch, step_key)
+            grads = constrain_grads(grads)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+                batch)
+            g0 = constrain_grads(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+            def body(carry, mb):
+                g_acc, i = carry
+                mk = jax.random.fold_in(step_key, i) \
+                    if step_key is not None else None
+                (l, m), g = jax.value_and_grad(
+                    loss_of, has_aux=True)(params, mb, mk)
+                g_acc = constrain_grads(jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc,
+                    constrain_grads(g)))
+                return (g_acc, i + 1), (l, m)
+
+            (grads, _), (losses, ms) = jax.lax.scan(body, (g0, 0), micro)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda x: x.mean(), ms)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        if cfg.quant != "none":
+            params = clip_binary_weights(params)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model) -> Callable:
+    def eval_step(params, batch):
+        loss, metrics = model.loss(params, batch, key=None)
+        return dict(metrics, loss=loss)
+    return eval_step
+
+
+def make_prefill_step(model: Model, max_len: int | None = None) -> Callable:
+    def prefill_step(params, batch):
+        kw: dict[str, Any] = {}
+        if model.cfg.family == "vlm":
+            kw["img_emb"] = batch["img_emb"]
+        if model.cfg.family in ("dense", "moe", "audio", "vlm") and max_len:
+            kw["max_len"] = max_len
+        return model.prefill(params, batch["tokens"], **kw)
+    return prefill_step
+
+
+def make_decode_step(model: Model) -> Callable:
+    def decode_step(params, token, cache, pos):
+        return model.decode(params, token, cache, pos)
+    return decode_step

@@ -1,0 +1,42 @@
+"""AP2 power-of-2 proxy properties (paper Eqs. 9-10)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ap2 import ap2, ap2_exponent, is_power_of_two, shift_mul
+
+nz_floats = st.floats(2.0 ** -16, 2.0 ** 20, allow_nan=False, width=32)
+
+
+@given(st.lists(nz_floats, min_size=1, max_size=32))
+@settings(deadline=None, max_examples=50)
+def test_ap2_is_power_of_two(xs):
+    z = ap2(jnp.asarray(xs, jnp.float32))
+    assert bool(is_power_of_two(z).all())
+
+
+@given(st.lists(nz_floats, min_size=1, max_size=32))
+@settings(deadline=None, max_examples=50)
+def test_ap2_within_sqrt2_factor(xs):
+    """Rounding in log2 space => ratio in [1/sqrt(2), sqrt(2)]."""
+    x = jnp.asarray(xs, jnp.float32)
+    r = np.asarray(ap2(x) / x)
+    assert (r >= 2 ** -0.5 - 1e-5).all() and (r <= 2 ** 0.5 + 1e-5).all()
+
+
+def test_ap2_signs_and_zero():
+    x = jnp.asarray([-3.0, 0.0, 3.0])
+    z = np.asarray(ap2(x))
+    assert z[0] == -4.0 and z[1] == 0.0 and z[2] == 4.0
+
+
+def test_shift_mul_exactness():
+    # multiplying by an exact power of two is bit-exact in fp
+    x = jnp.asarray([1.37, -2.2, 3.14159])
+    out = shift_mul(x, jnp.asarray([4.0, 4.0, 4.0]))
+    assert (out == x * 4.0).all()
+
+
+def test_ap2_exponent_matches():
+    x = jnp.asarray([0.25, 1.0, 6.0])
+    assert np.asarray(ap2_exponent(x)).tolist() == [-2, 0, 3]

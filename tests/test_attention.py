@@ -1,0 +1,87 @@
+"""Blockwise flash attention vs the naive oracle: fwd, bwd, masking modes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (
+    attention_ref, decode_attention, flash_attention,
+)
+
+CASES = [
+    # b, s, t, hq, hkv, d, causal, window, qoff
+    (2, 64, 64, 8, 2, 32, True, 0, 0),
+    (1, 37, 37, 4, 4, 16, True, 0, 0),
+    (2, 64, 64, 8, 2, 32, True, 24, 0),    # sliding window
+    (2, 16, 80, 8, 8, 32, False, 0, 0),    # cross attention
+    (1, 1, 33, 8, 2, 16, True, 0, 32),     # single-token with offset
+]
+
+
+@pytest.mark.parametrize("b,s,t,hq,hkv,d,causal,window,qoff", CASES)
+def test_forward_matches_reference(b, s, t, hq, hkv, d, causal, window, qoff):
+    ks = jax.random.split(jax.random.PRNGKey(s * t + hq), 3)
+    q = jax.random.normal(ks[0], (b, s, hq, d))
+    k = jax.random.normal(ks[1], (b, t, hkv, d))
+    v = jax.random.normal(ks[2], (b, t, hkv, d))
+    want = attention_ref(q, k, v, causal=causal, window=window, q_offset=qoff)
+    got = flash_attention(q, k, v, causal, window, 16, qoff)
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got),
+                               atol=2e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("b,s,t,hq,hkv,d,causal,window,qoff", CASES)
+def test_gradients_match_reference(b, s, t, hq, hkv, d, causal, window, qoff):
+    ks = jax.random.split(jax.random.PRNGKey(s + t + hq), 3)
+    q = jax.random.normal(ks[0], (b, s, hq, d))
+    k = jax.random.normal(ks[1], (b, t, hkv, d))
+    v = jax.random.normal(ks[2], (b, t, hkv, d))
+
+    def f(q, k, v):
+        return (flash_attention(q, k, v, causal, window, 16, qoff) ** 2).sum()
+
+    def fr(q, k, v):
+        return (attention_ref(q, k, v, causal=causal, window=window,
+                              q_offset=qoff).astype(jnp.float32) ** 2).sum()
+
+    g = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(fr, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(g, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   atol=5e-4, rtol=1e-3)
+
+
+def test_chunk_size_invariance():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (2, 50, 4, 16))
+    k = jax.random.normal(ks[1], (2, 50, 2, 16))
+    v = jax.random.normal(ks[2], (2, 50, 2, 16))
+    outs = [np.asarray(flash_attention(q, k, v, True, 0, c, 0))
+            for c in (7, 16, 50, 64)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, atol=2e-5)
+
+
+def test_decode_attention_matches_truncated_ref():
+    b, hq, hkv, d, t_max, t_valid = 3, 8, 2, 16, 40, 33
+    key = jax.random.PRNGKey(5)
+    q = jax.random.normal(key, (b, 1, hq, d))
+    kc = jax.random.normal(jax.random.fold_in(key, 1), (b, t_max, hkv, d))
+    vc = jax.random.normal(jax.random.fold_in(key, 2), (b, t_max, hkv, d))
+    out = decode_attention(q, kc, vc, t_valid)
+    want = attention_ref(q, kc[:, :t_valid], vc[:, :t_valid], causal=True,
+                         q_offset=t_valid - 1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+def test_decode_attention_window():
+    b, hq, hkv, d, t_max, t_valid, w = 2, 4, 1, 8, 30, 25, 10
+    key = jax.random.PRNGKey(6)
+    q = jax.random.normal(key, (b, 1, hq, d))
+    kc = jax.random.normal(jax.random.fold_in(key, 1), (b, t_max, hkv, d))
+    vc = jax.random.normal(jax.random.fold_in(key, 2), (b, t_max, hkv, d))
+    out = decode_attention(q, kc, vc, t_valid, window=w)
+    want = attention_ref(q, kc[:, t_valid - w:t_valid],
+                         vc[:, t_valid - w:t_valid], causal=True,
+                         q_offset=w - 1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)

@@ -1,0 +1,81 @@
+"""Unit + property tests for the paper's binarization primitives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.binarize import (
+    binarize_det, binarize_stoch, binary_act, clip_weights, hard_sigmoid,
+    hard_tanh, saturation_fraction, ste_mask,
+)
+
+finite_floats = st.floats(-10, 10, allow_nan=False, width=32)
+
+
+@given(st.lists(finite_floats, min_size=1, max_size=64))
+@settings(deadline=None, max_examples=50)
+def test_hard_tanh_range(xs):
+    y = hard_tanh(jnp.asarray(xs, jnp.float32))
+    assert (y >= -1).all() and (y <= 1).all()
+
+
+@given(st.lists(finite_floats, min_size=1, max_size=64))
+@settings(deadline=None, max_examples=50)
+def test_det_binarize_pm1(xs):
+    y = binarize_det(jnp.asarray(xs, jnp.float32))
+    assert set(np.unique(np.asarray(y))) <= {-1.0, 1.0}
+
+
+def test_det_binarize_sign_convention():
+    # sign(0) := +1 (Eq. 5)
+    y = binarize_det(jnp.asarray([-0.5, 0.0, 0.5]))
+    assert y.tolist() == [-1.0, 1.0, 1.0]
+
+
+def test_ste_gradient_is_saturation_mask():
+    x = jnp.asarray([-2.0, -0.5, 0.0, 0.5, 2.0])
+    g = jax.grad(lambda x: binarize_det(x).sum())(x)
+    assert g.tolist() == [0.0, 1.0, 1.0, 1.0, 0.0]
+
+
+def test_stochastic_binarize_mean_matches_hard_sigmoid():
+    key = jax.random.PRNGKey(0)
+    x = jnp.asarray([-0.8, -0.2, 0.0, 0.3, 0.9])
+    n = 20000
+    samples = jax.vmap(lambda k: binarize_stoch(x, k))(
+        jax.random.split(key, n))
+    emp_p = (samples > 0).mean(0)
+    np.testing.assert_allclose(np.asarray(emp_p),
+                               np.asarray(hard_sigmoid(x)), atol=0.02)
+    # E[binarize_stoch(x)] == HT(x)  (the paper's key identity, §3.2)
+    np.testing.assert_allclose(np.asarray(samples.mean(0)),
+                               np.asarray(hard_tanh(x)), atol=0.04)
+
+
+def test_stochastic_ste_gradient():
+    key = jax.random.PRNGKey(1)
+    x = jnp.asarray([-2.0, 0.5, 2.0])
+    g = jax.grad(lambda x: binarize_stoch(x, key).sum())(x)
+    assert g.tolist() == [0.0, 1.0, 0.0]
+
+
+def test_binary_act_composition():
+    key = jax.random.PRNGKey(2)
+    x = jnp.linspace(-3, 3, 41)
+    y = binary_act(x, stochastic=False)
+    assert set(np.unique(np.asarray(y))) <= {-1.0, 1.0}
+    g = jax.grad(lambda x: binary_act(x).sum())(x)
+    assert (np.asarray(g) == np.asarray(ste_mask(x))).all()
+
+
+@given(st.lists(finite_floats, min_size=1, max_size=64))
+@settings(deadline=None, max_examples=50)
+def test_clip_weights_bounds(xs):
+    w = clip_weights(jnp.asarray(xs, jnp.float32))
+    assert (jnp.abs(w) <= 1.0).all()
+
+
+def test_saturation_fraction():
+    w = jnp.asarray([1.0, -1.0, 0.5, 0.0])
+    assert float(saturation_fraction(w)) == pytest.approx(0.5)

@@ -1,0 +1,40 @@
+"""Property tests for bit-packing + XNOR-popcount dot identity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bitpack import (
+    pack_bits, packed_dot, packed_nbytes, packed_width, unpack_bits,
+)
+
+
+@given(st.integers(1, 200), st.integers(0, 2**31 - 1))
+@settings(deadline=None, max_examples=15)
+def test_pack_unpack_roundtrip(k, seed):
+    key = jax.random.PRNGKey(seed)
+    x = jnp.where(jax.random.bernoulli(key, 0.5, (3, k)), 1.0, -1.0)
+    p = pack_bits(x)
+    assert p.shape == (3, packed_width(k))
+    y = unpack_bits(p, k)
+    assert (x == y).all()
+
+
+@given(st.integers(1, 300), st.integers(0, 2**31 - 1))
+@settings(deadline=None, max_examples=15)
+def test_packed_dot_identity(k, seed):
+    """dot(a, b) == K - 2*popcount(xor) for +-1 vectors of any K."""
+    key = jax.random.PRNGKey(seed)
+    ka, kb = jax.random.split(key)
+    a = jnp.where(jax.random.bernoulli(ka, 0.5, (4, k)), 1.0, -1.0)
+    b = jnp.where(jax.random.bernoulli(kb, 0.5, (5, k)), 1.0, -1.0)
+    want = np.asarray(a @ b.T, np.int32)
+    got = np.asarray(packed_dot(pack_bits(a)[:, None], pack_bits(b)[None],
+                                k))
+    assert (want == got).all()
+
+
+def test_packed_nbytes_is_32x_smaller():
+    shape = (1024, 4096)
+    assert packed_nbytes(shape) == 1024 * (4096 // 32) * 4
+    assert packed_nbytes(shape) * 8 == 1024 * 4096  # exactly 1 bit/weight

@@ -1,0 +1,106 @@
+"""Optimizers: S-AdaMax power-of-2 constraints, schedules, EF-SignSGD."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ap2 import is_power_of_two
+from repro.optim import adamax, adamw, shift_adamax, sgd
+from repro.optim.base import apply_updates, clip_by_global_norm
+from repro.optim.ef_signsgd import (
+    ef_signsgd_compress, ef_signsgd_decompress, compressed_bytes, init_ef,
+)
+from repro.optim.shift_adamax import shift_lr_schedule
+
+
+def _quadratic_losses(opt, steps=200, dim=16, seed=0):
+    key = jax.random.PRNGKey(seed)
+    target = jax.random.normal(key, (dim,))
+    params = {"w": jnp.zeros((dim,))}
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state):
+        loss, g = jax.value_and_grad(
+            lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        up, state = opt.update(g, state, params)
+        return apply_updates(params, up), state, loss
+
+    losses = []
+    for _ in range(steps):
+        params, state, loss = step(params, state)
+        losses.append(float(loss))
+    return losses
+
+
+def test_adamax_converges():
+    losses = _quadratic_losses(adamax(0.05))
+    assert losses[-1] < 1e-2 * losses[0]
+
+
+def test_shift_adamax_converges():
+    losses = _quadratic_losses(shift_adamax(0.05))
+    assert losses[-1] < 1e-1 * losses[0]
+
+
+def test_adamw_and_sgd_converge():
+    assert _quadratic_losses(adamw(0.05))[-1] < 1e-2
+    assert _quadratic_losses(sgd(0.05, momentum=0.9))[-1] < 1e-2
+
+
+def test_shift_lr_schedule_powers_of_two():
+    sched = shift_lr_schedule(0.0013, halve_every=50)
+    for s in (1, 49, 50, 120, 500):
+        lr = sched(jnp.int32(s))
+        assert bool(is_power_of_two(lr))
+    assert float(sched(jnp.int32(100))) == float(sched(jnp.int32(0))) / 4
+
+
+def test_sadamax_update_scalings_are_shifts():
+    """Each S-AdaMax update element = -2^a * m * 2^b: update / m must be
+    a power of two (lr-shift times inv-u shift)."""
+    opt = shift_adamax(2 ** -5, b1=0.0)  # b1=0 => m == grad exactly
+    params = {"w": jnp.zeros((8,))}
+    state = opt.init(params)
+    g = {"w": jnp.asarray([0.3, -0.7, 1.3, -0.02, 5.0, 0.11, -9.0, 0.5])}
+    up, state = opt.update(g, state, params)
+    ratio = np.abs(np.asarray(up["w"] / g["w"]))
+    assert bool(is_power_of_two(jnp.asarray(ratio)).all())
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.ones((10,)) * 10}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(jnp.linalg.norm(clipped["a"])) <= 1.0 + 1e-5
+
+
+# --------------------------------------------------------------- EF-SignSGD
+def test_ef_signsgd_error_feedback_identity():
+    """decompressed + residual == corrected gradient (lossless ledger)."""
+    key = jax.random.PRNGKey(0)
+    g = {"w": jax.random.normal(key, (32, 8))}
+    ef = init_ef(g)
+    signs, scales, ef2 = ef_signsgd_compress(g, ef)
+    recon = ef_signsgd_decompress(signs, scales, 1)
+    np.testing.assert_allclose(
+        np.asarray(recon["w"] + ef2.error["w"]),
+        np.asarray(g["w"]), atol=1e-6)
+
+
+def test_ef_signsgd_converges_on_quadratic():
+    key = jax.random.PRNGKey(1)
+    target = jax.random.normal(key, (16,))
+    params = {"w": jnp.zeros((16,))}
+    ef = init_ef(params)
+    lr = 0.05
+    for _ in range(400):
+        g = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        signs, scales, ef = ef_signsgd_compress(g, ef)
+        ghat = ef_signsgd_decompress(signs, scales, 1)
+        params = jax.tree.map(lambda p, g_: p - lr * g_, params, ghat)
+    assert float(jnp.sum((params["w"] - target) ** 2)) < 1e-2
+
+
+def test_ef_signsgd_wire_bytes_32x_smaller():
+    params = {"w": jnp.zeros((1024, 1024))}
+    dense = 1024 * 1024 * 4
+    assert compressed_bytes(params) < dense / 30

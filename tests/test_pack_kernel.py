@@ -1,0 +1,37 @@
+"""Fused binarize+pack Pallas kernel vs the jnp reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bitpack import pack_bits, unpack_bits
+from repro.kernels.pack import pack_bits_kernel
+
+
+@pytest.mark.parametrize("m,k", [(8, 32), (17, 100), (256, 4096), (1, 31),
+                                 (300, 1000)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pack_kernel_matches_reference(m, k, dtype):
+    key = jax.random.PRNGKey(m * k)
+    x = jax.random.normal(key, (m, k), dtype)
+    want = np.asarray(pack_bits(x))
+    got = np.asarray(pack_bits_kernel(x))
+    np.testing.assert_array_equal(want, got)
+
+
+def test_pack_kernel_roundtrip():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (64, 257))
+    p = pack_bits_kernel(x)
+    y = unpack_bits(p, 257)
+    np.testing.assert_array_equal(np.asarray(y),
+                                  np.where(np.asarray(x) >= 0, 1.0, -1.0))
+
+
+@pytest.mark.parametrize("bm,bkw", [(8, 1), (64, 4), (256, 8)])
+def test_pack_kernel_block_sweep(bm, bkw):
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (100, 300))
+    want = np.asarray(pack_bits(x))
+    got = np.asarray(pack_bits_kernel(x, bm=bm, bkw=bkw))
+    np.testing.assert_array_equal(want, got)
