@@ -3,10 +3,30 @@ paper's 1-bit packed format for frozen binary weights.
 
 Layout per step:  <dir>/step_<n>/
     manifest.json         tree structure, shapes, dtypes, packing flags
-    arrays.npz            one entry per leaf (full logical arrays)
+    arrays.npz            one entry per leaf (full logical arrays, or
+                          wire-format uint32 words for packed leaves)
 Atomic: written to step_<n>.tmp then renamed. restore() reshards onto
 whatever mesh/shardings the caller provides — elastic scaling across
 restarts is a device_put away because logical arrays are stored whole.
+
+Packed-binary semantics (the paper's deployment format): a binary weight
+is stored as its sign bits in the *kernel wire format* of core.packed —
+packed along K of w^T into uint32 words, i.e. exactly the operand the
+XNOR+popcount serving kernel consumes. Two ways to produce it:
+
+  * save(tree) where `tree` was frozen by core.packed.freeze_params —
+    PackedWeight leaves serialize natively (words + k/kind/shape/dtype);
+  * save(tree, packed_binary=True[, binary_keys={...}]) on an fp-master
+    tree — freeze_params runs at write time (exact leaf-key match, dense
+    and conv wire formats; default keys: the qmatmul-served weight set).
+
+Either way, restore() returns those leaves **as PackedWeight**, i.e.
+directly in the packed runtime form: the serving engine loads 1-bit
+weights and never materializes fp32 masters. Pass `unpack=True` to get
+the legacy behavior of +-1 fp arrays in the logical shape (e.g. to warm-
+start training from a deployment artifact). Checkpoints written by older
+versions (sign bits packed along the last logical axis, no "format" key
+in the manifest) are still readable and unpack to +-1 fp.
 """
 from __future__ import annotations
 
@@ -20,16 +40,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bitpack import pack_bits, unpack_bits
+from repro.core.bitpack import unpack_bits
+from repro.core.packed import BINARY_WEIGHT_KEYS, PackedWeight, freeze_params
+
+
+def _is_packed(x) -> bool:
+    return isinstance(x, PackedWeight)
 
 
 def _flatten(tree) -> tuple[list, Any]:
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=_is_packed)
     return leaves, treedef
 
 
 def _leaf_names(tree) -> list[str]:
-    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    flat = jax.tree_util.tree_flatten_with_path(tree, is_leaf=_is_packed)[0]
     return ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
                      for k in path) for path, _ in flat]
 
@@ -46,17 +71,28 @@ class CheckpointManager:
     # ------------------------------------------------------------------ save
     def save(self, step: int, tree, *, packed_binary: bool = False,
              binary_keys: set[str] | None = None) -> None:
-        """packed_binary: store sign bits (1 bit/weight) for leaves whose
-        path contains a binary-weight key — the paper's deployment format."""
+        """packed_binary: store sign bits (1 bit/weight) for binary-weight
+        leaves — the paper's deployment format. Packing reuses
+        core.packed.freeze_params (exact leaf-key match; dense and conv
+        wire formats alike), with `binary_keys` defaulting to the set of
+        weights the forward actually serves through qmatmul/binary_conv2d.
+        PackedWeight leaves (trees frozen by the caller) always serialize
+        natively as wire-format words."""
+        if packed_binary:
+            tree = freeze_params(tree, frozenset(binary_keys)
+                                 if binary_keys is not None
+                                 else BINARY_WEIGHT_KEYS)
         leaves, treedef = _flatten(tree)
         names = _leaf_names(tree)
-        host = [np.asarray(jax.device_get(x)) for x in leaves]
+        host = [PackedWeight(np.asarray(jax.device_get(x.packed)), x.k,
+                             x.kind, x.conv_shape, x.orig_dtype)
+                if isinstance(x, PackedWeight)
+                else np.asarray(jax.device_get(x)) for x in leaves]
         if self._thread is not None:
             self._thread.join()  # one outstanding async save max
 
         def write():
-            self._write(step, host, names, treedef, packed_binary,
-                        binary_keys or set())
+            self._write(step, host, names, treedef)
             self._gc()
 
         if self.async_save:
@@ -65,7 +101,7 @@ class CheckpointManager:
         else:
             write()
 
-    def _write(self, step, host, names, treedef, packed_binary, binary_keys):
+    def _write(self, step, host, names, treedef):
         tmp = self.dir / f"step_{step}.tmp"
         final = self.dir / f"step_{step}"
         if tmp.exists():
@@ -74,15 +110,18 @@ class CheckpointManager:
         arrays, manifest = {}, {"step": step, "leaves": []}
         for i, (name, arr) in enumerate(zip(names, host)):
             key = f"leaf_{i}"
-            packed = packed_binary and arr.ndim >= 2 and any(
-                bk in name for bk in binary_keys)
-            if packed:
-                arrays[key] = np.asarray(pack_bits(jnp.asarray(arr)))
-            else:
-                arrays[key] = arr
+            if isinstance(arr, PackedWeight):  # runtime wire form, 1 bit/w
+                arrays[key] = np.asarray(arr.packed)
+                manifest["leaves"].append({
+                    "name": name, "key": key, "shape": list(arr.shape),
+                    "dtype": arr.orig_dtype, "packed": True,
+                    "format": "wire", "kind": arr.kind, "k": arr.k,
+                })
+                continue
+            arrays[key] = arr
             manifest["leaves"].append({
                 "name": name, "key": key, "shape": list(arr.shape),
-                "dtype": str(arr.dtype), "packed": bool(packed),
+                "dtype": str(arr.dtype), "packed": False,
             })
         np.savez(tmp / "arrays.npz", **arrays)
         (tmp / "manifest.json").write_text(json.dumps(manifest))
@@ -109,10 +148,22 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(self, step: int, like, shardings=None):
+    def restore(self, step: int, like, shardings=None, *,
+                unpack: bool = False):
         """Restore into the structure of `like` (a pytree of arrays or
         ShapeDtypeStructs). `shardings` (same structure) reshards onto the
-        current mesh — elastic restore after scaling up/down."""
+        current mesh — elastic restore after scaling up/down.
+
+        Packed-binary leaves come back **as PackedWeight** (the packed
+        runtime form — qmatmul/binary_conv2d serve them via XNOR+popcount
+        without ever materializing fp32 weights). `unpack=True` instead
+        materializes them as +-1 floats in the logical shape.
+
+        NOTE: a sharding entry for a packed leaf applies to the wire-format
+        words `(..., N, ceil(K/32))`, NOT the logical (K, N) weight — build
+        those specs for the packed layout (or leave packed leaves
+        replicated / restore with `unpack=True` before resharding).
+        """
         path = self.dir / f"step_{step}"
         manifest = json.loads((path / "manifest.json").read_text())
         data = np.load(path / "arrays.npz")
@@ -120,13 +171,24 @@ class CheckpointManager:
         leaves = []
         for entry in manifest["leaves"]:
             arr = data[entry["key"]]
-            if entry["packed"]:
+            if entry["packed"] and entry.get("format") == "wire":
+                conv = entry.get("kind") == "conv"
+                pw = PackedWeight(
+                    jnp.asarray(arr), entry["k"], entry.get("kind", "dense"),
+                    tuple(entry["shape"]) if conv else None, entry["dtype"])
+                leaves.append(pw.unpack() if unpack else pw)
+                continue
+            if entry["packed"]:  # legacy layout: packed along last axis
                 arr = np.asarray(unpack_bits(jnp.asarray(arr),
                                              entry["shape"][-1]))
                 arr = arr.reshape(entry["shape"]).astype(entry["dtype"])
             leaves.append(arr)
         tree = jax.tree_util.tree_unflatten(treedef, leaves)
         if shardings is not None:
-            tree = jax.tree.map(
-                lambda x, s: jax.device_put(x, s), tree, shardings)
+            def put(x, s):
+                if isinstance(x, PackedWeight):  # shard the wire words
+                    return PackedWeight(jax.device_put(x.packed, s), x.k,
+                                        x.kind, x.conv_shape, x.orig_dtype)
+                return jax.device_put(x, s)
+            tree = jax.tree.map(put, tree, shardings, is_leaf=_is_packed)
         return tree

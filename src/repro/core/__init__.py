@@ -11,8 +11,12 @@ from repro.core.shift_bn import (
     BNParams, BNState, init_bn, batch_norm, shift_batch_norm,
 )
 from repro.core.layers import (
-    QuantMode, qmatmul, quant_weights, quant_acts, DenseParams, init_dense,
-    dense,
+    QuantMode, qmatmul, packed_qmatmul, quant_weights, quant_acts,
+    DenseParams, init_dense, dense,
+)
+from repro.core.packed import (
+    PackedWeight, freeze_params, unfreeze_params, params_frozen,
+    resident_weight_bytes, BINARY_WEIGHT_KEYS,
 )
 
 __all__ = [
@@ -22,6 +26,8 @@ __all__ = [
     "pack_bits", "unpack_bits", "packed_dot", "packed_width",
     "packed_nbytes",
     "BNParams", "BNState", "init_bn", "batch_norm", "shift_batch_norm",
-    "QuantMode", "qmatmul", "quant_weights", "quant_acts", "DenseParams",
-    "init_dense", "dense",
+    "QuantMode", "qmatmul", "packed_qmatmul", "quant_weights", "quant_acts",
+    "DenseParams", "init_dense", "dense",
+    "PackedWeight", "freeze_params", "unfreeze_params", "params_frozen",
+    "resident_weight_bytes", "BINARY_WEIGHT_KEYS",
 ]

@@ -24,6 +24,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.binarize import binarize, binary_act, hard_tanh
+from repro.core.packed import (
+    PackedWeight, freeze_params, params_frozen, unfreeze_params,
+)
 
 Array = jax.Array
 
@@ -58,14 +61,41 @@ def quant_acts(x: Array, mode: QuantMode, *, train: bool,
     raise ValueError(mode)
 
 
-def qmatmul(x: Array, w: Array, mode: QuantMode, *, train: bool = False,
-            key: Array | None = None,
+def packed_qmatmul(x: Array, w: PackedWeight, mode: QuantMode, *,
+                   train: bool = False) -> Array:
+    """x @ w for a weight frozen to 1-bit at load time (inference only).
+
+    BBP/BBP_DET (binary activations): XNOR+popcount against the pre-packed
+    words — no fp32 weight is ever materialized. BC (fp activations):
+    unpack to +-1 and run the fp matmul (weights were binary already, so
+    this is still bit-exact with the master-weight path).
+    """
+    if train:
+        raise ValueError(
+            "packed params are frozen sign bits — inference only; keep the "
+            "fp32 masters for training (paper Alg. 1)")
+    if mode == QuantMode.NONE:
+        raise ValueError("params are frozen to 1-bit but quant mode is "
+                         "'none'; packed weights require a binary mode")
+    if mode == QuantMode.BC:
+        return jnp.matmul(x, w.unpack(x.dtype))
+    # binary activations: pure bitwise serving path
+    from repro.kernels.ops import packed_matmul  # local: avoids import cycle
+    return packed_matmul(x, w).astype(x.dtype)
+
+
+def qmatmul(x: Array, w: Array | PackedWeight, mode: QuantMode, *,
+            train: bool = False, key: Array | None = None,
             precision=None) -> Array:
     """Quantized x @ w with the mode's weight/activation treatment.
 
-    x: (..., K), w: (K, N). Keys are split internally for weight vs
-    activation noise (independent binarization noise, paper §2).
+    x: (..., K), w: (K, N) fp32 master, or a PackedWeight frozen by
+    core.packed.freeze_params (dispatches to the packed serving path).
+    Keys are split internally for weight vs activation noise (independent
+    binarization noise, paper §2).
     """
+    if isinstance(w, PackedWeight):
+        return packed_qmatmul(x, w, mode, train=train)
     kw = ka = None
     if key is not None:
         kw, ka = jax.random.split(key)

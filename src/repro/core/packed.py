@@ -1,0 +1,172 @@
+"""Packed parameter representation: freeze fp32 masters to 1-bit weights.
+
+The paper's deployment contract is train-with-fp-masters / serve-from-sign-
+bits: at run time a binary weight IS its sign, so the fp32 master can be
+discarded and the layer served from bit-packed words. `PackedWeight` is that
+runtime form — sign bits packed into uint32 words in the *kernel wire
+format* (`repro.core.bitpack`), plus the metadata needed to recover the
+logical tensor:
+
+  dense  — logical (..., K, N): packed along K of w^T -> (..., N, KW)
+           uint32, exactly the rhs operand `binary_gemm_vpu` consumes.
+           Leading axes (layer stacks, expert stacks) are preserved so
+           `jax.lax.scan` over stacked layer params keeps working.
+  conv   — logical (kh, kw, cin, cout): packed along the im2col axis
+           k = cin*kh*kw -> (cout, KW) uint32, exactly the weight matrix
+           `ops.binary_conv2d` builds per call today.
+
+`freeze_params` walks a params pytree and replaces every binary-weight leaf
+(by dict key, same key set the trainer clips per Algorithm 1) with its
+PackedWeight. The quantize step thereby moves from per-call to load-time:
+~32x smaller resident weights and no re-binarization in the serving path.
+
+PackedWeight is a registered pytree node (the packed words are the only
+array child; k/kind/shape/dtype ride in the static aux), so frozen trees
+pass through `jax.jit`, `lax.scan`, `device_put`, and checkpointing
+unchanged.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bitpack import pack_bits, unpack_bits
+
+Array = jax.Array
+
+# dict keys of weights that are binarized in the forward pass — everything
+# routed through qmatmul / binary_conv2d, and only that. NOTE: this is a
+# strict subset of the trainer's clip set (train.step._CLIP_KEYS): e.g. the
+# RG-LRU gates w_input_gate/w_rec_gate are clipped to [-1,1] but consumed
+# at full precision in the recurrence, so they must NOT be frozen.
+BINARY_WEIGHT_KEYS = frozenset({
+    "wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
+    "in_proj", "out_proj", "x_proj", "w_x", "w_out", "w",
+})
+
+
+@jax.tree_util.register_pytree_node_class
+class PackedWeight:
+    """A frozen 1-bit weight: packed sign words + logical metadata."""
+
+    def __init__(self, packed: Array, k: int, kind: str = "dense",
+                 conv_shape: tuple[int, ...] | None = None,
+                 orig_dtype: str = "float32"):
+        self.packed = packed          # (..., N, KW) uint32 wire-format words
+        self.k = int(k)               # true contraction length (pre-padding)
+        self.kind = kind              # "dense" | "conv"
+        self.conv_shape = tuple(conv_shape) if conv_shape else None
+        self.orig_dtype = str(orig_dtype)
+
+    # ---------------------------------------------------------- pytree node
+    def tree_flatten(self):
+        return (self.packed,), (self.k, self.kind, self.conv_shape,
+                                self.orig_dtype)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        k, kind, conv_shape, orig_dtype = aux
+        return cls(children[0], k, kind, conv_shape, orig_dtype)
+
+    # ------------------------------------------------------------- metadata
+    @property
+    def shape(self) -> tuple[int, ...]:
+        """Logical (unpacked) shape."""
+        if self.kind == "conv":
+            return self.conv_shape
+        return tuple(self.packed.shape[:-2]) + (self.k, self.packed.shape[-2])
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.prod(self.packed.shape, dtype=np.int64)) * 4
+
+    def __repr__(self):
+        return (f"PackedWeight(kind={self.kind!r}, shape={self.shape}, "
+                f"packed={tuple(self.packed.shape)} uint32)")
+
+    # --------------------------------------------------------------- unpack
+    def unpack(self, dtype=None) -> Array:
+        """Materialize the logical +-1 tensor (BC-mode fallback / tests)."""
+        dtype = dtype or self.orig_dtype
+        flat = unpack_bits(self.packed, self.k, dtype=dtype)  # (..., N, K)
+        if self.kind == "conv":
+            kh, kw, cin, cout = self.conv_shape
+            return flat.reshape(cout, cin, kh, kw).transpose(2, 3, 1, 0)
+        return jnp.swapaxes(flat, -1, -2)
+
+
+def _pack_dense(w: Array) -> PackedWeight:
+    """(..., K, N) float -> wire-format PackedWeight."""
+    return PackedWeight(pack_bits(jnp.swapaxes(w, -1, -2)), k=w.shape[-2],
+                        kind="dense", orig_dtype=w.dtype)
+
+
+def _pack_conv(w: Array) -> PackedWeight:
+    """(kh, kw, cin, cout) float -> im2col wire-format PackedWeight."""
+    kh, kw, cin, cout = w.shape
+    wmat = w.transpose(2, 0, 1, 3).reshape(cin * kh * kw, cout)
+    return PackedWeight(pack_bits(wmat.T), k=cin * kh * kw, kind="conv",
+                        conv_shape=w.shape, orig_dtype=w.dtype)
+
+
+def freeze_params(params, keys: frozenset[str] | set[str] = BINARY_WEIGHT_KEYS):
+    """Replace every binary-weight leaf with its 1-bit PackedWeight.
+
+    A leaf is frozen when its own dict key is in `keys` and it is a weight
+    matrix (ndim >= 2). The paper CNN's 4-D conv kernels (key 'w') pack in
+    im2col layout; everything else packs over the last two (K, N) dims with
+    leading stack axes preserved. Biases, norms, embeddings, routers, and
+    BN state pass through untouched.
+    """
+    def leaf(path, p):
+        if isinstance(p, PackedWeight):
+            return p
+        name = getattr(path[-1], "key", None) if path else None
+        if name not in keys or getattr(p, "ndim", 0) < 2:
+            return p
+        if name == "w" and p.ndim == 4:
+            return _pack_conv(p)
+        return _pack_dense(p)
+
+    return jax.tree_util.tree_map_with_path(
+        leaf, params, is_leaf=lambda x: isinstance(x, PackedWeight))
+
+
+def unfreeze_params(params, dtype=None):
+    """Inverse of freeze_params (up to sign): PackedWeight -> +-1 floats."""
+    return jax.tree.map(
+        lambda p: p.unpack(dtype) if isinstance(p, PackedWeight) else p,
+        params, is_leaf=lambda x: isinstance(x, PackedWeight))
+
+
+def params_frozen(params) -> bool:
+    """True if the tree contains any PackedWeight leaf."""
+    return any(isinstance(p, PackedWeight) for p in jax.tree.leaves(
+        params, is_leaf=lambda x: isinstance(x, PackedWeight)))
+
+
+def resident_weight_bytes(params, keys: frozenset[str] | set[str]
+                          = BINARY_WEIGHT_KEYS) -> dict[str, int]:
+    """Resident bytes split into binary-layer weights vs everything else.
+
+    Counts what actually lives in memory: packed words for PackedWeight
+    leaves, full array bytes otherwise.
+    """
+    out = {"binary": 0, "other": 0}
+
+    def leaf(path, p):
+        name = getattr(path[-1], "key", None) if path else None
+        nbytes = int(p.nbytes)
+        binary = isinstance(p, PackedWeight) or (
+            name in keys and getattr(p, "ndim", 0) >= 2)
+        out["binary" if binary else "other"] += nbytes
+        return p
+
+    jax.tree_util.tree_map_with_path(
+        leaf, params, is_leaf=lambda x: isinstance(x, PackedWeight))
+    return out

@@ -27,6 +27,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.bitpack import pack_bits
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 Array = jax.Array
 
 
@@ -86,10 +89,84 @@ def binary_gemm_vpu(a_packed: Array, b_packed: Array, k_true: int, *,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((a_packed.shape[0], b_packed.shape[0]),
                                        jnp.int32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a_packed, b_packed)
+    return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# VPU popcount kernel with a pre-packed weight operand: the serving path.
+# Weights were frozen to wire-format words at load time (core.packed), so
+# only the float activations get sign-packed here — in VMEM, fused with the
+# xor/popcount accumulation, never materializing packed activations to HBM.
+# ---------------------------------------------------------------------------
+def _vpu_packed_rhs_kernel(a_ref, b_ref, o_ref, *, k_true: int, bk: int,
+                           nk: int):
+    """a_ref: (bm, bk*32) float, b_ref: (bn, bk) uint32, o_ref: (bm, bn) i32."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # sign-pack the float activation block in VMEM; the block is already
+    # word-aligned, so bitpack's pure-jnp packer (the wire format's single
+    # source of truth) traces fine inside the kernel
+    aw = pack_bits(a_ref[...])                               # (bm, bk)
+    b = b_ref[...]
+
+    def body(w, acc):
+        x = jnp.bitwise_xor(aw[:, w][:, None], b[:, w][None, :])
+        return acc + jax.lax.population_count(x).astype(jnp.int32)
+
+    acc = jax.lax.fori_loop(0, bk, body, o_ref[...])
+    is_last = pl.program_id(2) == nk - 1
+    o_ref[...] = jnp.where(is_last, jnp.int32(k_true) - 2 * acc, acc)
+
+
+def binary_gemm_vpu_packed(a: Array, b_packed: Array, k_true: int, *,
+                           bm: int = 128, bn: int = 128, bk: int = 8,
+                           interpret: bool | None = None) -> Array:
+    """XNOR-popcount GEMM against frozen packed weights.
+
+    a: (M, K) float activations; b_packed: (N, ceil(K/32)) uint32 — the rhs
+    already transposed + packed once at freeze time (core.packed wire
+    format, pad bits 1). Returns (M, N) int32 = sign(a) . sign-rows(b).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    m, k = a.shape
+    n, kw = b_packed.shape
+    assert k == k_true and kw * 32 >= k, (k, k_true, kw)
+    # pad a's K up to full words with +1.0: bit 1 matches the wire-format
+    # pad bits of b, so xor(pad, pad) == 0 contributes nothing
+    if kw * 32 - k:
+        a = jnp.pad(a, ((0, 0), (0, kw * 32 - k)), constant_values=1.0)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, kw)
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-kw) % bk
+    # word-granular K padding: b grows zero words; a grows -1.0 columns,
+    # which pack to the zero word, so xor(0, 0) == 0 again cancels.
+    if pm or pk:
+        a = jnp.pad(a, ((0, pm), (0, pk * 32)), constant_values=-1.0)
+    if pn or pk:
+        b_packed = jnp.pad(b_packed, ((0, pn), (0, pk)))
+    gm, gn, gk = a.shape[0] // bm, b_packed.shape[0] // bn, b_packed.shape[1] // bk
+
+    out = pl.pallas_call(
+        functools.partial(_vpu_packed_rhs_kernel, k_true=k_true, bk=bk, nk=gk),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk * 32), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((a.shape[0], b_packed.shape[0]),
+                                       jnp.int32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b_packed)
     return out[:m, :n]
 
 
@@ -139,7 +216,7 @@ def binary_gemm_mxu(x: Array, w: Array, *, bm: int = 128, bn: int = 128,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((x.shape[0], w.shape[1]), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, w)

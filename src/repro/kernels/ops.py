@@ -18,8 +18,11 @@ import jax.numpy as jnp
 
 from repro.core.binarize import ste_mask
 from repro.core.bitpack import pack_bits
+from repro.core.packed import PackedWeight
 from repro.kernels import ref
-from repro.kernels.binary_gemm import binary_gemm_mxu, binary_gemm_vpu
+from repro.kernels.binary_gemm import (
+    binary_gemm_mxu, binary_gemm_vpu, binary_gemm_vpu_packed,
+)
 
 Array = jax.Array
 
@@ -76,12 +79,60 @@ def binary_matmul_mxu(x: Array, w: Array) -> Array:
     return binary_matmul(x, w, "mxu")
 
 
-def binary_conv2d(x: Array, w: Array, *, path: str = "vpu") -> Array:
+# ---------------------------------------------------------------------------
+# Packed-weight inference path: weights frozen to wire-format words at load
+# time (core.packed); per call only the activations are sign-packed, fused
+# inside the kernel. Inference-only — no custom_vjp, by design.
+# ---------------------------------------------------------------------------
+def packed_matmul(x: Array, w: PackedWeight, *, path: str = "vpu") -> Array:
+    """sign(x) @ frozen-sign(w) from pre-packed weights.
+
+    x: (..., K) float; w: a PackedWeight whose wire matrix is (N, KW) —
+    a dense weight, or a conv weight against im2col'd activations.
+    Returns (..., N) int32 (exact popcount arithmetic); callers cast.
+    """
+    assert w.packed.ndim == 2, w
+    k = x.shape[-1]
+    assert k == w.k, (k, w.k)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, k)
+    if path == "vpu":
+        out = binary_gemm_vpu_packed(x2, w.packed, k)
+    elif path == "ref":
+        out = ref.binary_matmul_packed_ref(pack_bits(x2), w.packed, k)
+    else:
+        raise ValueError(path)
+    return out.reshape(lead + (w.packed.shape[0],))
+
+
+def packed_conv2d(x: Array, w: PackedWeight, *, path: str = "vpu") -> Array:
+    """Binary conv from a pre-packed im2col weight (SAME padding, stride 1).
+
+    x: (B, H, W, Cin) float; w: conv PackedWeight frozen from a
+    (kh, kw, Cin, Cout) kernel. Returns (B, H, W, Cout) float32, bit-exact
+    with binary_conv2d on the unpacked weight.
+    """
+    assert w.kind == "conv", w
+    kh, kw, cin, cout = w.conv_shape
+    b, h, wd, _ = x.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        ref.sign_pm1(x), (kh, kw), (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    cols = patches.reshape(b * h * wd, cin * kh * kw)
+    out = packed_matmul(cols, w, path=path).astype(jnp.float32)
+    return out.reshape(b, h, wd, cout)
+
+
+def binary_conv2d(x: Array, w: Array | PackedWeight, *,
+                  path: str = "vpu") -> Array:
     """Binary conv via im2col + binary GEMM (SAME padding, stride 1).
 
-    x: (B, H, W, Cin) float; w: (kh, kw, Cin, Cout) float.
+    x: (B, H, W, Cin) float; w: (kh, kw, Cin, Cout) float, or a frozen conv
+    PackedWeight (dispatches to the packed runtime path).
     Returns (B, H, W, Cout) float32 == conv(sign(x), sign(w)).
     """
+    if isinstance(w, PackedWeight):
+        return packed_conv2d(x, w, path="ref" if path == "ref" else "vpu")
     kh, kw, cin, cout = w.shape
     b, h, wd, _ = x.shape
     # sign-binarize BEFORE patch extraction so the implicit zero-padding of

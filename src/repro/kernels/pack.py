@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 from repro.core.bitpack import WORD, packed_width
 
 Array = jax.Array
@@ -55,7 +57,7 @@ def pack_bits_kernel(x: Array, *, bm: int = 256, bkw: int = 8,
         out_specs=pl.BlockSpec((bm, bkw), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((x.shape[0], x.shape[1] // WORD),
                                        jnp.uint32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(x)

@@ -19,6 +19,9 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--ckpt", default=None, help="checkpoint dir to load")
+    ap.add_argument("--freeze", action="store_true",
+                    help="freeze binary weights to packed 1-bit form and "
+                         "serve from XNOR+popcount")
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -38,7 +41,12 @@ def main() -> None:
         params = model.init(key)
 
     eng = ServingEngine(cfg, params,
-                        max_len=args.prompt_len + args.max_new + 1)
+                        max_len=args.prompt_len + args.max_new + 1,
+                        freeze=args.freeze)
+    if eng.frozen:
+        rb = eng.resident_weight_bytes()
+        print(f"serving packed 1-bit weights: binary layers "
+              f"{rb['binary']/1e6:.2f} MB resident")
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab, args.prompt_len,
                                         dtype=np.int32),

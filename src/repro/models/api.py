@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.packed import freeze_params, params_frozen
 from repro.models import ssm_lm
 from repro.models import transformer as T
 
@@ -31,6 +32,25 @@ class Model:
     decode: Callable[..., tuple[Array, Any]]
     init_cache: Callable[..., Any]
 
+    def freeze(self, params):
+        """Freeze fp32 masters to 1-bit packed weights (inference only).
+
+        prefill/decode/logits dispatch per-leaf: a PackedWeight leaf routes
+        its matmul through the XNOR+popcount packed kernel, so the same
+        Model callables serve both fp-master and frozen params.
+        """
+        if self.cfg.quant == "none":
+            raise ValueError(f"{self.cfg.name}: quant='none' has no binary "
+                             "weights to freeze")
+        return freeze_params(params)
+
+
+def _guard_trainable(params, fn, *args, **kw):
+    if params_frozen(params):
+        raise ValueError("params are frozen to packed 1-bit form — "
+                         "inference only; restore the fp32 masters to train")
+    return fn(params, *args, **kw)
+
 
 def get_model(cfg: ModelConfig) -> Model:
     fam = cfg.family
@@ -38,8 +58,8 @@ def get_model(cfg: ModelConfig) -> Model:
         return Model(
             cfg=cfg,
             init=lambda key: T.init_transformer_params(key, cfg),
-            loss=lambda p, batch, key=None: T.transformer_loss(
-                p, cfg, batch, key=key),
+            loss=lambda p, batch, key=None: _guard_trainable(
+                p, T.transformer_loss, cfg, batch, key=key),
             logits=lambda p, tokens, **kw: T.transformer_logits(
                 p, cfg, tokens, **kw),
             prefill=lambda p, tokens, **kw: T.transformer_prefill(
@@ -52,8 +72,8 @@ def get_model(cfg: ModelConfig) -> Model:
         return Model(
             cfg=cfg,
             init=lambda key: ssm_lm.init_mamba_params(key, cfg),
-            loss=lambda p, batch, key=None: ssm_lm.mamba_loss(
-                p, cfg, batch, key=key),
+            loss=lambda p, batch, key=None: _guard_trainable(
+                p, ssm_lm.mamba_loss, cfg, batch, key=key),
             logits=lambda p, tokens, **kw: ssm_lm.mamba_logits(
                 p, cfg, tokens, **{k: v for k, v in kw.items()
                                    if k in ("train", "key")}),
@@ -66,7 +86,8 @@ def get_model(cfg: ModelConfig) -> Model:
         return Model(
             cfg=cfg,
             init=lambda key: ssm_lm.init_rg_params(key, cfg),
-            loss=lambda p, batch, key=None: ssm_lm.rg_loss(p, cfg, batch, key=key),
+            loss=lambda p, batch, key=None: _guard_trainable(
+                p, ssm_lm.rg_loss, cfg, batch, key=key),
             logits=lambda p, tokens, **kw: ssm_lm.rg_logits(
                 p, cfg, tokens, **{k: v for k, v in kw.items()
                                    if k in ("train", "key")}),

@@ -163,8 +163,24 @@ def moe_ffn(params: dict, x: Array, kind: str, mode: QuantMode, *,
 
 
 def _batched_qmm(x: Array, w: Array, mode: QuantMode, train, key):
-    """x: (E, C, Din), w: (E, Din, Dout) — per-expert quantized matmul."""
+    """x: (E, C, Din), w: (E, Din, Dout) — per-expert quantized matmul.
+
+    w may be a PackedWeight (experts frozen to 1-bit): binary modes then
+    run the popcount dot directly on the packed words per expert.
+    """
     from repro.core.layers import quant_acts, quant_weights
+    from repro.core.packed import PackedWeight
+    if isinstance(w, PackedWeight):
+        if train:
+            raise ValueError("packed expert weights are inference-only")
+        if mode in (QuantMode.BBP, QuantMode.BBP_DET):
+            from repro.core.bitpack import pack_bits, packed_dot
+            a_p = pack_bits(x)                       # (E, C, KW) sign words
+            return packed_dot(a_p[:, :, None, :], w.packed[:, None, :, :],
+                              w.k).astype(x.dtype)   # (E, C, Dout)
+        if mode == QuantMode.BC:
+            return jnp.einsum("ecd,edf->ecf", x, w.unpack(x.dtype))
+        raise ValueError("packed experts require a binary quant mode")
     kw = ka = None
     if key is not None:
         kw, ka = jax.random.split(key)

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 
 from repro.core.binarize import binary_act, binarize, clip_weights
 from repro.core.layers import QuantMode, qmatmul
+from repro.core.packed import PackedWeight
 from repro.core.shift_bn import (
     BNParams, BNState, batch_norm, init_bn, shift_batch_norm,
 )
@@ -139,20 +140,27 @@ def cnn_forward(params: dict, bn_state: dict, x: Array, *, mode: str = "bbp",
     for i, cp in enumerate(params["convs"]):
         kk = jax.random.fold_in(key, i) if key is not None else None
         stoch = train and key is not None and mode == "bbp"
+        frozen = isinstance(cp["w"], PackedWeight)
+        if frozen and (train or qm == QuantMode.NONE):
+            raise ValueError("frozen packed conv weights serve binary "
+                             "inference only; keep fp32 masters otherwise")
         if qm == QuantMode.NONE:
             hq, wq = h, cp["w"]
         else:
-            wq = binarize(cp["w"], stochastic=stoch, key=kk)
+            wq = cp["w"] if frozen \
+                else binarize(cp["w"], stochastic=stoch, key=kk)
             ka = jax.random.fold_in(kk, 3) if stoch else None
             hq = binary_act(h, stochastic=stoch, key=ka) \
                 if (qm == QuantMode.BBP and i > 0) else h
         if qm == QuantMode.BBP and i > 0:
             # fully binary conv: all realizations share the +1-padding
-            # convention, so 'ref'/'vpu'/'mxu' are bit-identical
+            # convention, so 'ref'/'vpu'/'mxu' are bit-identical — and the
+            # packed route (frozen wire-format weights) dispatches inside
             pre = binary_conv2d(hq, wq, path=kernel_path)
         else:
+            wmat = wq.unpack(hq.dtype) if frozen else wq.astype(hq.dtype)
             pre = jax.lax.conv_general_dilated(
-                hq, wq.astype(hq.dtype), (1, 1), "SAME",
+                hq, wmat, (1, 1), "SAME",
                 dimension_numbers=("NHWC", "HWIO", "NHWC"))
         pre, bns_new = bn_fn(cp["bn"], bn_state["convs"][i], pre, train=train)
         new_bn["convs"].append(bns_new)

@@ -290,7 +290,12 @@ def _layer_window(cfg: ModelConfig, idx) -> int:
 
 def transformer_loss(params: dict, cfg: ModelConfig, batch: dict, *,
                      key: Array | None = None) -> tuple[Array, dict]:
-    """Next-token cross-entropy. batch: {tokens (B,S), [img_emb]}."""
+    """Next-token cross-entropy. batch: {tokens (B,S), [img_emb]}.
+
+    Frozen packed params are rejected one level up (models.api wraps every
+    family's loss in a params_frozen guard); the per-leaf packed_qmatmul
+    train check backstops direct callers.
+    """
     tokens = batch["tokens"]
     logits, aux = transformer_logits(params, cfg, tokens,
                                      img_emb=batch.get("img_emb"),
@@ -328,7 +333,12 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
 def transformer_prefill(params: dict, cfg: ModelConfig, tokens: Array, *,
                         img_emb: Array | None = None, max_len: int | None = None
                         ) -> tuple[Array, dict]:
-    """Run the prompt, return (last-position logits (B,V), cache)."""
+    """Run the prompt, return (last-position logits (B,V), cache).
+
+    Works for fp32-master and frozen packed params alike: every projection
+    routes through qmatmul, which dispatches PackedWeight leaves to the
+    XNOR+popcount serving kernel (quantization done once at load time).
+    """
     mode = QuantMode(cfg.quant)
     b, s = tokens.shape
     max_len = max_len or s

@@ -4,6 +4,13 @@ Inference is the paper's deployment story: weights are frozen to sign
 bits (1 bit each, `packed_binary` checkpoints), all binarized matmuls are
 pure XNOR+popcount, and the engine serves batches of requests with a
 jit'd single-token decode step.
+
+Pass `freeze=True` (or call `.freeze()`, or construct from a tree already
+frozen by core.packed / restored from a packed checkpoint) to serve from
+the packed runtime form: binary weights live as uint32 sign words (~32x
+smaller resident footprint) and every binarized matmul runs against the
+pre-packed operand — the quantize step happens once at load, never per
+decode step.
 """
 from __future__ import annotations
 
@@ -16,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.packed import params_frozen, resident_weight_bytes
 from repro.models.api import Model, get_model
 
 
@@ -28,12 +36,15 @@ class Request:
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_len: int = 512,
-                 mesh=None):
+                 mesh=None, freeze: bool = False):
         self.cfg = cfg
         self.model = get_model(cfg)
         self.params = params
         self.max_len = max_len
         self.mesh = mesh
+        self.frozen = params_frozen(params)
+        if freeze:
+            self.freeze()
         self._decode = jax.jit(self.model.decode, donate_argnums=(2,))
         self._prefill = jax.jit(
             lambda p, t: self.model.prefill(
@@ -42,6 +53,22 @@ class ServingEngine:
                          else {})))
         self.stats = {"prefill_tokens": 0, "decode_steps": 0,
                       "prefill_s": 0.0, "decode_s": 0.0}
+
+    def freeze(self) -> "ServingEngine":
+        """Freeze fp32 masters to packed 1-bit weights, in place.
+
+        Load-time quantization: after this, batched decode runs entirely
+        on packed weights (XNOR+popcount) and the fp32 masters are gone.
+        Idempotent; returns self for chaining.
+        """
+        if not self.frozen:
+            self.params = self.model.freeze(self.params)
+            self.frozen = True
+        return self
+
+    def resident_weight_bytes(self) -> dict:
+        """Bytes of weights resident in memory, split binary vs other."""
+        return resident_weight_bytes(self.params)
 
     def generate(self, requests: list[Request], key=None) -> list[np.ndarray]:
         """Greedy/sampled generation for a batch of same-length prompts."""
@@ -72,7 +99,10 @@ class ServingEngine:
             self.stats["decode_steps"] += 1
         jax.block_until_ready(logits)
         self.stats["decode_s"] += time.time() - t0
-        return [np.asarray(o, np.int32) for o in outs]
+        # the batch decodes max(max_new_tokens) steps together; honor each
+        # request's own budget in what we hand back
+        return [np.asarray(o[:r.max_new_tokens], np.int32)
+                for o, r in zip(outs, requests)]
 
     def _select(self, logits, requests, key, i):
         if all(r.temperature == 0.0 for r in requests):

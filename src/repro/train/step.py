@@ -20,7 +20,10 @@ from repro.optim.base import Optimizer, apply_updates
 
 Array = jax.Array
 
-# dict keys of binarized projection weights (clipped to [-1,1] per Alg. 1)
+# dict keys of binarized projection weights (clipped to [-1,1] per Alg. 1).
+# NOT the same as core.packed.BINARY_WEIGHT_KEYS (the freeze/serve set):
+# w_input_gate/w_rec_gate are clipped here but consumed at full precision
+# in the RG-LRU recurrence, so they are never frozen to 1-bit.
 _CLIP_KEYS = {
     "wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down", "in_proj",
     "out_proj", "w_x", "w_out", "w_input_gate", "w_rec_gate", "w",

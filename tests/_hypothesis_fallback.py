@@ -1,0 +1,66 @@
+"""Deterministic stand-in for the slice of the `hypothesis` API this suite
+uses, so property tests degrade to a fixed grid of examples instead of
+erroring at collection when hypothesis isn't installed.
+
+Install the real thing (see requirements-dev.txt) to get true randomized
+property testing; test files import it preferentially:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+import types
+
+
+class _Strategy:
+    def __init__(self, samples):
+        self.samples = list(samples)
+
+
+def _floats(min_value, max_value, allow_nan=False, width=64):
+    lo, hi = float(min_value), float(max_value)
+    return _Strategy([lo, hi, (lo + hi) / 2,
+                      lo + (hi - lo) * 0.123, lo + (hi - lo) * 0.987])
+
+
+def _integers(min_value, max_value):
+    a, b = int(min_value), int(max_value)
+    return _Strategy(sorted({a, b, (a + b) // 2, a + (b - a) // 3,
+                             min(a + 1, b)}))
+
+
+def _lists(elements, min_size=0, max_size=None):
+    base = elements.samples or [0]
+    def take(n, rev=False):
+        xs = (base * (n // len(base) + 1))[:n]
+        return list(reversed(xs)) if rev else xs
+    sizes = sorted({max(min_size, 1), max_size or max(min_size, 1)})
+    return _Strategy([take(n, rev) for n in sizes for rev in (False, True)])
+
+
+strategies = types.SimpleNamespace(floats=_floats, integers=_integers,
+                                   lists=_lists)
+
+
+def given(*strats):
+    """Run the test over a zip-cycled grid of each strategy's samples.
+
+    The wrapper takes no arguments on purpose: pytest must not mistake the
+    strategy-supplied parameters for fixtures.
+    """
+    def deco(fn):
+        def wrapper():
+            n = max(len(s.samples) for s in strats)
+            for i in range(n):
+                fn(*[s.samples[i % len(s.samples)] for s in strats])
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco
+
+
+def settings(**_kw):
+    return lambda fn: fn

@@ -1,7 +1,11 @@
 """AP2 power-of-2 proxy properties (paper Eqs. 9-10)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # degrade to a fixed example grid (requirements-dev.txt)
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.ap2 import ap2, ap2_exponent, is_power_of_two, shift_mul
 

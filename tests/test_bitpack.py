@@ -2,7 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # degrade to a fixed example grid (requirements-dev.txt)
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.bitpack import (
     pack_bits, packed_dot, packed_nbytes, packed_width, unpack_bits,

@@ -46,18 +46,24 @@ def test_gc_keeps_last_n(tmp_path):
 
 
 def test_packed_binary_checkpoint(tmp_path):
-    """The paper's 1-bit deployment format: signs survive, 32x smaller."""
+    """The paper's 1-bit deployment format: signs survive, 32x smaller,
+    and restore lands directly in the packed runtime form."""
+    from repro.core.packed import PackedWeight
     mgr = CheckpointManager(tmp_path, async_save=False)
     key = jax.random.PRNGKey(2)
     tree = {"wq": jax.random.uniform(key, (64, 128), minval=-1, maxval=1),
             "scale": jnp.ones((64,))}
     mgr.save(1, tree, packed_binary=True, binary_keys={"wq"})
     out = mgr.restore(1, tree)
-    # signs preserved exactly
-    np.testing.assert_array_equal(np.sign(np.asarray(out["wq"]) + 0.5),
-                                  np.sign(np.asarray(tree["wq"]) + 0.0) * 0
-                                  + np.where(np.asarray(tree["wq"]) >= 0, 1, -1))
-    assert set(np.unique(np.asarray(out["wq"]))) <= {-1.0, 1.0}
+    # binary leaf comes back as the packed runtime form (no fp32 rebuild)
+    assert isinstance(out["wq"], PackedWeight)
+    assert out["wq"].shape == (64, 128) and out["wq"].k == 64
+    signs = np.where(np.asarray(tree["wq"]) >= 0, 1.0, -1.0)
+    np.testing.assert_array_equal(np.asarray(out["wq"].unpack()), signs)
+    # unpack=True materializes the legacy +-1 fp view
+    unp = mgr.restore(1, tree, unpack=True)
+    assert set(np.unique(np.asarray(unp["wq"]))) <= {-1.0, 1.0}
+    np.testing.assert_array_equal(np.asarray(unp["wq"]), signs)
     # non-binary leaves intact
     np.testing.assert_array_equal(np.asarray(out["scale"]),
                                   np.asarray(tree["scale"]))

@@ -1,0 +1,243 @@
+"""Packed-weight inference runtime: freeze -> packed forward must be
+bit-exact with the `ref` oracle, for dense and conv layers, K not a
+multiple of 32, whole models, the serving engine, and across a packed
+checkpoint save/restore round-trip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.smoke import smoke_config
+from repro.core.layers import QuantMode, qmatmul
+from repro.core.packed import (
+    PackedWeight, freeze_params, params_frozen, resident_weight_bytes,
+    unfreeze_params,
+)
+from repro.kernels import ref
+from repro.kernels.ops import binary_conv2d, packed_matmul
+from repro.models import get_model
+from repro.serving.engine import Request, ServingEngine
+
+
+# ---------------------------------------------------------------------------
+# Layer level: bit-exact vs the ref oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("k,n", [(100, 48), (37, 5), (64, 129), (256, 32)])
+def test_packed_dense_matches_ref_oracle(k, n):
+    key = jax.random.PRNGKey(k * 1000 + n)
+    kw, kx = jax.random.split(key)
+    w = jax.random.normal(kw, (k, n))
+    x = jax.random.normal(kx, (3, 7, k))
+    pw = freeze_params({"wq": w})["wq"]
+    assert isinstance(pw, PackedWeight)
+    want = np.asarray(ref.binary_matmul_ref(x.reshape(-1, k), w))
+    got = np.asarray(qmatmul(x, pw, QuantMode.BBP_DET)).reshape(-1, n)
+    np.testing.assert_array_equal(want, got)
+    # and identical to the fp-master quantized path
+    np.testing.assert_array_equal(
+        np.asarray(qmatmul(x, w, QuantMode.BBP_DET)),
+        np.asarray(qmatmul(x, pw, QuantMode.BBP_DET)))
+
+
+def test_packed_matmul_vpu_and_ref_paths_agree():
+    key = jax.random.PRNGKey(7)
+    w = jax.random.normal(key, (70, 24))
+    x = jax.random.normal(jax.random.fold_in(key, 1), (9, 70))
+    pw = freeze_params({"wo": w})["wo"]
+    np.testing.assert_array_equal(
+        np.asarray(packed_matmul(x, pw, path="vpu")),
+        np.asarray(packed_matmul(x, pw, path="ref")))
+
+
+def test_packed_bc_mode_matches_master_path():
+    """BC: binary weights, fp activations — served via unpack, bit-exact."""
+    key = jax.random.PRNGKey(3)
+    w = jax.random.normal(key, (50, 12))
+    x = jax.random.normal(jax.random.fold_in(key, 1), (4, 50))
+    pw = freeze_params({"w_up": w})["w_up"]
+    np.testing.assert_array_equal(np.asarray(qmatmul(x, w, QuantMode.BC)),
+                                  np.asarray(qmatmul(x, pw, QuantMode.BC)))
+
+
+def test_packed_conv_matches_ref_oracle():
+    key = jax.random.PRNGKey(11)
+    kc, kx = jax.random.split(key)
+    w = jax.random.normal(kc, (3, 3, 5, 9))       # cin*kh*kw = 45, not %32
+    x = jax.random.normal(kx, (2, 8, 8, 5))
+    pw = freeze_params({"w": w})["w"]
+    assert pw.kind == "conv" and pw.k == 45
+    np.testing.assert_array_equal(np.asarray(ref.binary_conv2d_ref(x, w)),
+                                  np.asarray(binary_conv2d(x, pw)))
+
+
+def test_unpack_recovers_signs():
+    key = jax.random.PRNGKey(5)
+    w2 = jax.random.normal(key, (37, 8))
+    w4 = jax.random.normal(key, (3, 3, 4, 6))
+    f = freeze_params({"wq": w2, "w": w4})
+    np.testing.assert_array_equal(np.asarray(f["wq"].unpack()),
+                                  np.asarray(ref.sign_pm1(w2)))
+    np.testing.assert_array_equal(np.asarray(f["w"].unpack()),
+                                  np.asarray(ref.sign_pm1(w4)))
+    unf = unfreeze_params(f)
+    assert unf["wq"].shape == w2.shape and unf["w"].shape == w4.shape
+
+
+def test_frozen_params_are_inference_only():
+    w = jnp.ones((8, 4))
+    pw = freeze_params({"wq": w})["wq"]
+    x = jnp.ones((2, 8))
+    with pytest.raises(ValueError):
+        qmatmul(x, pw, QuantMode.BBP_DET, train=True)
+    with pytest.raises(ValueError):
+        qmatmul(x, pw, QuantMode.NONE)
+
+
+# ---------------------------------------------------------------------------
+# Model level: frozen forward == master forward, decode included
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ["phi3-medium-14b", "dbrx-132b",
+                                  "falcon-mamba-7b"])
+def test_frozen_model_logits_bit_exact(arch):
+    cfg = smoke_config(arch)          # bbp_det quant, float32 smoke dtype
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    frozen = model.freeze(params)
+    assert params_frozen(frozen) and not params_frozen(params)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 10), 0, cfg.vocab)
+    a, _ = model.logits(params, tokens, train=False)
+    b, _ = model.logits(frozen, tokens, train=False)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_frozen_model_loss_raises():
+    cfg = smoke_config("phi3-medium-14b")
+    model = get_model(cfg)
+    frozen = model.freeze(model.init(jax.random.PRNGKey(0)))
+    batch = {"tokens": jnp.zeros((2, 8), jnp.int32)}
+    with pytest.raises(ValueError, match="frozen"):
+        model.loss(frozen, batch)
+
+
+def test_paper_nets_frozen_forward_bit_exact():
+    from repro.models.paper_nets import (
+        cnn_forward, init_cnn, init_mlp, mlp_forward,
+    )
+    key = jax.random.PRNGKey(0)
+    mlp = init_mlp(key, in_dim=20, hidden=32, n_hidden=2)
+    x = jax.random.normal(key, (4, 20))
+    frozen = freeze_params(mlp)
+    np.testing.assert_array_equal(
+        np.asarray(mlp_forward(mlp, x, mode="bbp")),
+        np.asarray(mlp_forward(frozen, x, mode="bbp")))
+
+    cnn, bn = init_cnn(key, widths=(4, 4, 4, 4, 4, 4), fc=16, img=8)
+    xi = jax.random.normal(key, (2, 8, 8, 3))
+    frozen_cnn = freeze_params(cnn)
+    want, _ = cnn_forward(cnn, bn, xi, mode="bbp")
+    got, _ = cnn_forward(frozen_cnn, bn, xi, mode="bbp")
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+# ---------------------------------------------------------------------------
+# Serving engine: frozen decode, resident bytes, per-request budgets
+# ---------------------------------------------------------------------------
+def test_engine_frozen_decode_matches_masters():
+    cfg = smoke_config("phi3-medium-14b")
+    params = get_model(cfg).init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab, 8, dtype=np.int32),
+                    max_new_tokens=5) for _ in range(3)]
+    out_fp = ServingEngine(cfg, params, max_len=24).generate(reqs)
+    eng = ServingEngine(cfg, params, max_len=24, freeze=True)
+    assert eng.frozen
+    for a, b in zip(out_fp, eng.generate(reqs)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_engine_packed_resident_bytes_at_most_16x_smaller():
+    cfg = smoke_config("phi3-medium-14b")
+    params = get_model(cfg).init(jax.random.PRNGKey(0))
+    fp = resident_weight_bytes(params)
+    pk = resident_weight_bytes(freeze_params(params))
+    assert fp["binary"] > 0
+    assert pk["binary"] <= fp["binary"] / 16      # exactly 1/32 + padding
+    assert pk["other"] == fp["other"]
+
+
+def test_engine_respects_per_request_max_new_tokens():
+    cfg = smoke_config("musicgen-large")
+    params = get_model(cfg).init(jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, max_len=32)
+    rng = np.random.default_rng(0)
+    budgets = [2, 7, 4]
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab, 8, dtype=np.int32),
+                    max_new_tokens=m) for m in budgets]
+    outs = eng.generate(reqs)
+    assert [len(o) for o in outs] == budgets
+    # shorter requests are prefixes of what a uniform-budget batch yields
+    uniform = eng.generate([Request(prompt=r.prompt, max_new_tokens=7)
+                            for r in reqs])
+    for got, full in zip(outs, uniform):
+        np.testing.assert_array_equal(got, full[:len(got)])
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint: packed round-trips directly into the runtime form
+# ---------------------------------------------------------------------------
+def test_frozen_tree_checkpoint_roundtrip(tmp_path):
+    cfg = smoke_config("phi3-medium-14b")
+    model = get_model(cfg)
+    frozen = model.freeze(model.init(jax.random.PRNGKey(0)))
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    mgr.save(3, frozen)
+    back = mgr.restore(3, frozen)
+    is_pw = lambda x: isinstance(x, PackedWeight)
+    for a, b in zip(jax.tree.leaves(frozen, is_leaf=is_pw),
+                    jax.tree.leaves(back, is_leaf=is_pw)):
+        if is_pw(a):
+            assert is_pw(b) and (a.k, a.kind) == (b.k, b.kind)
+            np.testing.assert_array_equal(np.asarray(a.packed),
+                                          np.asarray(b.packed))
+        else:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_packed_checkpoint_restores_to_packed_and_serves(tmp_path):
+    """fp masters -> packed_binary save -> restore is PackedWeight, and the
+    engine serves from it bit-identically to freezing in memory."""
+    cfg = smoke_config("phi3-medium-14b")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    mgr.save(0, params, packed_binary=True)
+    back = mgr.restore(0, params)
+    assert params_frozen(back)
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab, 8, dtype=np.int32),
+                    max_new_tokens=4) for _ in range(2)]
+    want = ServingEngine(cfg, params, max_len=24, freeze=True).generate(reqs)
+    got = ServingEngine(cfg, back, max_len=24).generate(reqs)
+    for a, b in zip(want, got):
+        np.testing.assert_array_equal(a, b)
+
+    # unpack=True gives +-1 fp masters in the logical shape
+    unp = mgr.restore(0, params, unpack=True)
+    wq = np.asarray(unp["blocks"]["attn"]["wq"])
+    assert wq.shape == params["blocks"]["attn"]["wq"].shape
+    assert set(np.unique(wq)) <= {-1.0, 1.0}
+
+
+def test_conv_packed_checkpoint_roundtrip(tmp_path):
+    """Odd-K conv weights survive the wire format exactly."""
+    key = jax.random.PRNGKey(2)
+    tree = freeze_params({"w": jax.random.normal(key, (3, 3, 5, 9)),
+                          "b": jnp.ones((9,))})
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    mgr.save(1, tree)
+    back = mgr.restore(1, tree)
+    assert back["w"].kind == "conv" and back["w"].k == 45
+    np.testing.assert_array_equal(np.asarray(tree["w"].unpack()),
+                                  np.asarray(back["w"].unpack()))
