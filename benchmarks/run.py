@@ -9,6 +9,8 @@ Prints ``name,us_per_call,derived`` CSV.
   Fig. 4   (saturation)   -> bench_saturation
   binary GEMM kernel      -> bench_binary_gemm
   §6 deployment (packed)  -> bench_packed_serving
+  continuous batching     -> bench_continuous_serving (slot scheduler vs
+                             static same-length batches, mixed traffic)
   roofline (dry-run)      -> src/repro/roofline/report.py (separate: needs
                              the 512-device dryrun_results.jsonl)
 """
@@ -19,12 +21,13 @@ import sys
 
 def main() -> None:
     from benchmarks import (
-        bench_accuracy, bench_binary_gemm, bench_convergence, bench_energy,
-        bench_kernel_dedup, bench_packed_serving, bench_saturation,
+        bench_accuracy, bench_binary_gemm, bench_continuous_serving,
+        bench_convergence, bench_energy, bench_kernel_dedup,
+        bench_packed_serving, bench_saturation,
     )
     mods = [bench_energy, bench_binary_gemm, bench_packed_serving,
-            bench_kernel_dedup, bench_accuracy, bench_saturation,
-            bench_convergence]
+            bench_continuous_serving, bench_kernel_dedup, bench_accuracy,
+            bench_saturation, bench_convergence]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")
     for mod in mods:

@@ -52,5 +52,5 @@ reqs = [Request(prompt=rng.integers(0, cfg.vocab, 16, dtype=np.int32),
 outs = eng.generate(reqs)
 for i, o in enumerate(outs):
     print(f"request {i}: generated {o.tolist()}")
-print("engine stats:", {k: round(v, 3) if isinstance(v, float) else v
-                        for k, v in eng.stats.items()})
+print("scheduler stats:", {k: round(v, 3) if isinstance(v, float) else v
+                           for k, v in eng.scheduler().stats.items()})

@@ -115,7 +115,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
             tok_sh = NamedSharding(mesh, P(ba))
             c_sh = cache_shardings(mesh, specs["cache"], cfg.family,
                                    shape.global_batch)
-            pos_sh = NamedSharding(mesh, P())
+            # per-slot (B,) positions shard with the batch, like tokens
+            pos_sh = NamedSharding(mesh, P(ba))
             jfn = jax.jit(step, in_shardings=(p_sh, tok_sh, c_sh, pos_sh),
                           out_shardings=(None, c_sh), donate_argnums=(2,))
             lowered = jfn.lower(params_sds, specs["token"], specs["cache"],

@@ -1,11 +1,16 @@
-"""Serving launcher: loads (or initializes) a model and serves a batch of
-synthetic requests through the prefill+decode engine.
+"""Serving launcher: loads (or initializes) a model and serves synthetic
+requests — either one static batch through the legacy engine path, or a
+queue of mixed-length requests with Poisson arrivals through the
+continuous-batching scheduler.
 
   PYTHONPATH=src python -m repro.launch.serve --arch musicgen-large --smoke
+  PYTHONPATH=src python -m repro.launch.serve --arch musicgen-large --smoke \
+      --queue --arrival-rate 8 --batch 12
 """
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 import numpy as np
@@ -15,13 +20,25 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="number of requests to serve")
+    ap.add_argument("--prompt-len", type=int, default=32,
+                    help="prompt length (max length in --queue mode: "
+                         "lengths are drawn from [prompt_len//4, prompt_len])")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--ckpt", default=None, help="checkpoint dir to load")
     ap.add_argument("--freeze", action="store_true",
                     help="freeze binary weights to packed 1-bit form and "
                          "serve from XNOR+popcount")
+    ap.add_argument("--queue", action="store_true",
+                    help="continuous-batching mode: mixed-length requests "
+                         "stream through the slot scheduler")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="requests/second Poisson arrivals in --queue mode "
+                         "(0 = submit everything upfront)")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode slots in --queue mode")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -31,7 +48,7 @@ def main() -> None:
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = get_model(cfg)
-    key = jax.random.PRNGKey(0)
+    key = jax.random.PRNGKey(args.seed)
     if args.ckpt:
         from repro.checkpoint.manager import CheckpointManager
         mgr = CheckpointManager(args.ckpt)
@@ -42,12 +59,20 @@ def main() -> None:
 
     eng = ServingEngine(cfg, params,
                         max_len=args.prompt_len + args.max_new + 1,
-                        freeze=args.freeze)
+                        freeze=args.freeze, slots=args.slots, seed=args.seed)
     if eng.frozen:
         rb = eng.resident_weight_bytes()
-        print(f"serving packed 1-bit weights: binary layers "
-              f"{rb['binary']/1e6:.2f} MB resident")
-    rng = np.random.default_rng(0)
+        total = rb["binary"] + rb["other"]
+        print(f"serving packed 1-bit weights: {total/1e6:.2f} MB resident "
+              f"total = {rb['binary']/1e6:.2f} MB binary layers (packed) "
+              f"+ {rb['other']/1e6:.2f} MB non-binary (embeddings, norms, "
+              f"recurrence dynamics)")
+    rng = np.random.default_rng(args.seed)
+
+    if args.queue:
+        _serve_queue(eng, cfg, rng, args)
+        return
+
     reqs = [Request(prompt=rng.integers(0, cfg.vocab, args.prompt_len,
                                         dtype=np.int32),
                     max_new_tokens=args.max_new)
@@ -55,7 +80,54 @@ def main() -> None:
     outs = eng.generate(reqs)
     for i, o in enumerate(outs):
         print(f"req {i}: {o.tolist()}")
-    print("stats:", eng.stats)
+    print("stats:", eng.scheduler().stats)
+
+
+def _serve_queue(eng, cfg, rng, args) -> None:
+    """Stream `--batch` mixed-length requests through the scheduler with
+    exponential inter-arrival gaps (`--arrival-rate` req/s)."""
+    from repro.serving.engine import Request
+
+    sched = eng.scheduler()
+    lo = max(1, args.prompt_len // 4)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab,
+                                        int(rng.integers(lo, args.prompt_len + 1)),
+                                        dtype=np.int32),
+                    max_new_tokens=int(rng.integers(1, args.max_new + 1)))
+            for _ in range(args.batch)]
+    if args.arrival_rate > 0:
+        gaps = rng.exponential(1.0 / args.arrival_rate, size=len(reqs))
+        arrive_at = np.cumsum(gaps)
+    else:
+        arrive_at = np.zeros(len(reqs))
+
+    t0 = time.time()
+    pending = list(zip(arrive_at, reqs))
+    lats = []
+    while pending or not sched.idle:
+        now = time.time() - t0
+        while pending and pending[0][0] <= now:
+            _, req = pending.pop(0)
+            rid = sched.submit(req)
+            print(f"t={now:7.3f}s submit rid={rid} "
+                  f"prompt={req.prompt.size} max_new={req.max_new_tokens}")
+        if sched.idle and pending:
+            time.sleep(min(0.01, pending[0][0] - now))
+            continue
+        # non-drain poll: yield at every completion so slots stay
+        # admittable for requests arriving mid-flight
+        for c in sched.poll(drain=not pending):
+            lats.append(c.latency)
+            print(f"t={time.time()-t0:7.3f}s done   rid={c.rid} "
+                  f"tokens={c.tokens.size} latency={c.latency*1e3:.1f}ms")
+    wall = time.time() - t0
+    lats = np.asarray(sorted(lats))
+    print(f"served {len(lats)} requests in {wall:.3f}s | "
+          f"{sched.stats['tokens_out']/wall:.1f} tok/s | "
+          f"p50 {np.percentile(lats, 50)*1e3:.1f}ms "
+          f"p99 {np.percentile(lats, 99)*1e3:.1f}ms | "
+          f"decode steps {sched.decode_steps()} "
+          f"bursts {sched.stats['bursts']}")
 
 
 if __name__ == "__main__":

@@ -44,9 +44,12 @@ def decode_specs(cfg: ModelConfig, model: Model, shape: ShapeSpec) -> dict:
     # cache length = seq_len for attention archs; SSM/hybrid states are
     # O(1) in seq_len by construction (ring buffers / recurrent state)
     cache = cache_specs(cfg, model, b, shape.seq_len)
+    # (B,) positions: the continuous-batching runtime decodes every slot
+    # at its own offset, so the decode cell compiles with a per-slot
+    # position vector (a scalar still works — decode broadcasts)
     out = {"token": SDS((b,), jnp.int32),
            "cache": cache,
-           "pos": SDS((), jnp.int32)}
+           "pos": SDS((b,), jnp.int32)}
     return out
 
 

@@ -5,6 +5,10 @@
     loss, metrics = model.loss(params, batch, key=key)
     logits, cache = model.prefill(params, tokens, ...)
     logits, cache = model.decode(params, token, cache, pos)
+
+`pos` may be a scalar (static same-length batch) or a (B,) vector — one
+write position per batch row, which is what lets a continuous-batching
+scheduler hold requests at different offsets in the same decode batch.
 """
 from __future__ import annotations
 
@@ -101,3 +105,23 @@ def get_model(cfg: ModelConfig) -> Model:
 
 def param_count(params) -> int:
     return sum(int(jnp.size(x)) for x in jax.tree.leaves(params))
+
+
+def cache_batch_axes(model: Model, max_len: int):
+    """Pytree of ints: which axis of each cache leaf is the batch axis.
+
+    Cache layouts differ per family (layer-major KV, grouped VLM caches,
+    stacked recurrent states), so the batch axis is found structurally:
+    it is the one axis on which a 1-slot and a 2-slot cache disagree.
+    Used by the serving scheduler to write a freshly prefilled request's
+    cache/state rows into its slot of the shared batch cache.
+    """
+    c1 = jax.eval_shape(lambda: model.init_cache(1, max_len))
+    c2 = jax.eval_shape(lambda: model.init_cache(2, max_len))
+
+    def axis(a, b):
+        diff = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
+        assert len(diff) == 1, f"ambiguous batch axis: {a.shape} vs {b.shape}"
+        return diff[0]
+
+    return jax.tree.map(axis, c1, c2)

@@ -89,6 +89,9 @@ def mamba_prefill(params: dict, cfg: ModelConfig, tokens: Array
 
 def mamba_decode(params: dict, cfg: ModelConfig, token: Array, cache: dict,
                  pos: Array) -> tuple[Array, dict]:
+    """O(1) decode step. `pos` (scalar or (B,)) is accepted for API
+    uniformity but unused: the recurrence is position-free; per-slot
+    state reset happens by overwriting the state rows at admission."""
     mode = QuantMode(cfg.quant)
     h = params["embed"][token[:, None]].astype(cfg.activation_dtype)
 
@@ -316,11 +319,16 @@ def rg_prefill(params: dict, cfg: ModelConfig, tokens: Array
 
 def rg_decode(params: dict, cfg: ModelConfig, token: Array, cache: dict,
               pos: Array) -> tuple[Array, dict]:
+    """pos: scalar or (B,) int32 — each row writes its own ring-buffer slot
+    and masks from its own length (rows of a continuous-batching slot
+    batch sit at different offsets)."""
     mode = QuantMode(cfg.quant)
     wnd = cfg.local_window
+    bsz = token.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (bsz,))
     h = params["embed"][token[:, None]].astype(cfg.activation_dtype)
-    slot = pos % wnd
-    cache_len = jnp.minimum(pos + 1, wnd)
+    slot = pos % wnd                                           # (B,)
+    cache_len = jnp.minimum(pos + 1, wnd)                      # (B,)
 
     def group_body(h, xs):
         gp, rcs, rhs, kc, vc = xs
@@ -340,11 +348,12 @@ def rg_decode(params: dict, cfg: ModelConfig, token: Array, cache: dict,
         q = qmatmul(xn, ap["wq"], mode).reshape(b, 1, cfg.n_heads, cfg.head_dim)
         k = qmatmul(xn, ap["wk"], mode).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
         v = qmatmul(xn, ap["wv"], mode).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
-        positions = jnp.full((1,), pos)
+        positions = pos[:, None]                               # (B, 1)
         q = rope(q, positions, cfg.rope_theta)
         k = rope(k, positions, cfg.rope_theta)
-        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, slot, 0, 0))
-        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, slot, 0, 0))
+        rows = jnp.arange(b)
+        kc = kc.at[rows, slot].set(k[:, 0].astype(kc.dtype))
+        vc = vc.at[rows, slot].set(v[:, 0].astype(vc.dtype))
         out = decode_attention(q, kc, vc, cache_len)
         out = out.reshape(b, 1, cfg.n_heads * cfg.head_dim)
         h = h + qmatmul(out, ap["wo"], mode)

@@ -386,18 +386,20 @@ def transformer_prefill(params: dict, cfg: ModelConfig, tokens: Array, *,
 
 
 def _decode_self_block(bp, h, kc, vc, cfg, mode, pos, window):
-    """One-token self-attn block against cache. h: (B,1,D)."""
+    """One-token self-attn block against cache. h: (B,1,D); pos: (B,) —
+    each row writes its KV at its own position and masks from its own
+    length (rows of a continuous-batching slot batch sit at different
+    offsets)."""
     b = h.shape[0]
     xn = _norm(bp["ln1"], h, cfg)
     q, k_new, v_new = _qkv(bp["attn"], xn, cfg, mode, False, None)
     if cfg.pos == "rope":
-        positions = jnp.full((1,), pos)
+        positions = pos[:, None]                               # (B, 1)
         q = rope(q, positions, cfg.rope_theta)
         k_new = rope(k_new, positions, cfg.rope_theta)
-    kc = jax.lax.dynamic_update_slice(kc, k_new.astype(kc.dtype),
-                                      (0, pos, 0, 0))
-    vc = jax.lax.dynamic_update_slice(vc, v_new.astype(vc.dtype),
-                                      (0, pos, 0, 0))
+    rows = jnp.arange(b)
+    kc = kc.at[rows, pos].set(k_new[:, 0].astype(kc.dtype))
+    vc = vc.at[rows, pos].set(v_new[:, 0].astype(vc.dtype))
     out = decode_attention(q, kc, vc, pos + 1, window=window)
     out = out.reshape(b, 1, cfg.n_heads * cfg.head_dim)
     h = h + qmatmul(out, bp["attn"]["wo"], mode)
@@ -407,14 +409,17 @@ def _decode_self_block(bp, h, kc, vc, cfg, mode, pos, window):
 
 def transformer_decode(params: dict, cfg: ModelConfig, token: Array,
                        cache: dict, pos: Array) -> tuple[Array, dict]:
-    """One decode step. token: (B,) int32; pos: scalar int32 (current write
-    position = number of tokens already in cache). Returns (logits (B,V),
-    updated cache)."""
+    """One decode step. token: (B,) int32; pos: scalar or (B,) int32 (per-row
+    write position = number of tokens already in that row's context; a
+    scalar is broadcast — the static same-length batch). Returns
+    (logits (B,V), updated cache)."""
     mode = QuantMode(cfg.quant)
+    b = token.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     h = params["embed"][token[:, None]].astype(cfg.activation_dtype)
     if cfg.pos == "sinusoidal":
-        pe = sinusoidal_pos(jnp.full((1,), pos), cfg.d_model)
-        h = h + pe[None].astype(h.dtype)
+        pe = sinusoidal_pos(pos, cfg.d_model)                  # (B, d)
+        h = h + pe[:, None].astype(h.dtype)
     window = cfg.local_window
 
     if cfg.family == "vlm":

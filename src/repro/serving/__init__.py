@@ -1,1 +1,4 @@
-"""serving subpackage."""
+"""Serving runtime: continuous-batching scheduler + engine + sampling."""
+from repro.serving.engine import Request, Scheduler, ServingEngine
+
+__all__ = ["Request", "Scheduler", "ServingEngine"]

@@ -1,9 +1,18 @@
-"""Batched serving engine: prefill + decode with a persistent KV cache.
+"""Serving engine: continuous-batching runtime over the packed 1-bit model.
 
 Inference is the paper's deployment story: weights are frozen to sign
 bits (1 bit each, `packed_binary` checkpoints), all binarized matmuls are
-pure XNOR+popcount, and the engine serves batches of requests with a
-jit'd single-token decode step.
+pure XNOR+popcount, and the engine serves traffic through a slot
+scheduler (`serving.scheduler`): variable-length prompts, per-request
+token budgets and eos, slots recycled the moment a request completes,
+sampling and token accumulation on device.
+
+`generate(requests)` is a thin shim over the scheduler — it accepts
+ragged prompt lengths and honors each request's own `max_new_tokens` /
+`eos_id`. `generate_static(requests)` keeps the legacy same-length
+fixed-step batch loop (the baseline the continuous-batching benchmark
+compares against); it too accumulates tokens on device and transfers
+once per call, never per step.
 
 Pass `freeze=True` (or call `.freeze()`, or construct from a tree already
 frozen by core.packed / restored from a packed checkpoint) to serve from
@@ -14,9 +23,7 @@ decode step.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -24,25 +31,25 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.packed import params_frozen, resident_weight_bytes
-from repro.models.api import Model, get_model
+from repro.models.api import get_model
+from repro.serving.scheduler import Request, Scheduler
 
-
-@dataclasses.dataclass
-class Request:
-    prompt: np.ndarray           # (S,) int32
-    max_new_tokens: int = 16
-    temperature: float = 0.0     # 0 => greedy
+__all__ = ["Request", "Scheduler", "ServingEngine"]
 
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_len: int = 512,
-                 mesh=None, freeze: bool = False):
+                 mesh=None, freeze: bool = False, slots: int = 4,
+                 seed: int = 0):
         self.cfg = cfg
         self.model = get_model(cfg)
         self.params = params
         self.max_len = max_len
         self.mesh = mesh
+        self.slots = slots
         self.frozen = params_frozen(params)
+        self._key = jax.random.PRNGKey(seed)
+        self._sched: Scheduler | None = None
         if freeze:
             self.freeze()
         self._decode = jax.jit(self.model.decode, donate_argnums=(2,))
@@ -62,22 +69,59 @@ class ServingEngine:
         Idempotent; returns self for chaining.
         """
         if not self.frozen:
+            if self._sched is not None and not self._sched.idle:
+                raise RuntimeError(
+                    "cannot freeze with requests in flight — drain the "
+                    "scheduler (run()) first")
             self.params = self.model.freeze(self.params)
             self.frozen = True
+            self._sched = None     # rebuild over the frozen params
         return self
 
     def resident_weight_bytes(self) -> dict:
         """Bytes of weights resident in memory, split binary vs other."""
         return resident_weight_bytes(self.params)
 
+    def _next_key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def scheduler(self) -> Scheduler:
+        """The engine's continuous-batching scheduler (built lazily)."""
+        if self._sched is None:
+            self._sched = Scheduler(self.cfg, self.model, self.params,
+                                    n_slots=self.slots, max_len=self.max_len)
+        return self._sched
+
     def generate(self, requests: list[Request], key=None) -> list[np.ndarray]:
-        """Greedy/sampled generation for a batch of same-length prompts."""
+        """Generate for a batch of requests — ragged prompt lengths,
+        per-request budgets/eos — through the slot scheduler.
+
+        With temperature > 0 and no explicit `key`, samples draw from the
+        engine's held key, split per call: repeated calls give fresh
+        samples; pass `key` to reproduce a draw.
+        """
+        assert requests, "empty batch"
+        sched = self.scheduler()
+        sched.reseed(key if key is not None else self._next_key())
+        rids = [sched.submit(r) for r in requests]
+        comps = sched.run()
+        return [comps[rid].tokens for rid in rids]
+
+    def generate_static(self, requests: list[Request], key=None
+                        ) -> list[np.ndarray]:
+        """Legacy static batch loop: same-length prompts, every request
+        decoded for the batch-max number of steps. Tokens accumulate on
+        device and transfer once at the end — no per-step host sync."""
         assert requests, "empty batch"
         lens = {len(r.prompt) for r in requests}
-        assert len(lens) == 1, "engine batches same-length prompts"
+        assert len(lens) == 1, "static path batches same-length prompts"
         s = lens.pop()
         max_new = max(r.max_new_tokens for r in requests)
-        tokens = jnp.asarray(np.stack([r.prompt for r in requests]))
+        tokens = jax.device_put(
+            np.stack([np.asarray(r.prompt, np.int32) for r in requests]))
+        if key is None and any(r.temperature > 0 for r in requests):
+            key = self._next_key()
 
         t0 = time.time()
         logits, cache = self._prefill(self.params, tokens)
@@ -85,30 +129,27 @@ class ServingEngine:
         self.stats["prefill_s"] += time.time() - t0
         self.stats["prefill_tokens"] += int(tokens.size)
 
-        outs = [list() for _ in requests]
         cur = self._select(logits, requests, key, 0)
+        steps = [cur]
         t0 = time.time()
-        for i in range(max_new):
-            for j, tok in enumerate(np.asarray(cur)):
-                outs[j].append(int(tok))
-            if i == max_new - 1:
-                break
+        for i in range(max_new - 1):
             logits, cache = self._decode(self.params, cur, cache,
                                          jnp.int32(s + i))
             cur = self._select(logits, requests, key, i + 1)
+            steps.append(cur)
             self.stats["decode_steps"] += 1
-        jax.block_until_ready(logits)
+        out = jax.device_get(jnp.stack(steps, axis=1))   # ONE transfer
         self.stats["decode_s"] += time.time() - t0
         # the batch decodes max(max_new_tokens) steps together; honor each
         # request's own budget in what we hand back
-        return [np.asarray(o[:r.max_new_tokens], np.int32)
-                for o, r in zip(outs, requests)]
+        return [out[j, :r.max_new_tokens].astype(np.int32)
+                for j, r in enumerate(requests)]
 
     def _select(self, logits, requests, key, i):
         if all(r.temperature == 0.0 for r in requests):
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        k = jax.random.fold_in(key if key is not None
-                               else jax.random.PRNGKey(0), i)
+        assert key is not None, "sampling needs a key (engine supplies one)"
+        k = jax.random.fold_in(key, i)
         temp = jnp.asarray([max(r.temperature, 1e-4) for r in requests])
         return jax.random.categorical(k, logits / temp[:, None], axis=-1
                                       ).astype(jnp.int32)

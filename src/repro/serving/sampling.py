@@ -1,0 +1,43 @@
+"""On-device token selection for the serving runtime.
+
+Everything here is jit-safe and stays on device: the scheduler samples
+inside its decode loop with per-slot temperatures and per-slot PRNG keys,
+so no logits or tokens cross to the host per step.
+
+Reproducibility contract: a request's samples depend only on
+(engine/call base key, submission index since the last reseed, token
+index) — never on which slot it landed in or how traffic interleaved —
+so the same submissions after the same reseed replay bit-identically.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def request_key(base_key: Array, rid) -> Array:
+    """Per-request PRNG key: the call/engine base key folded with the
+    request id. Slot- and batch-composition-independent."""
+    return jax.random.fold_in(base_key, rid)
+
+
+def step_keys(req_keys: Array, token_idx: Array) -> Array:
+    """Per-slot sampling keys for one decode step.
+
+    req_keys: (B, 2) uint32 per-slot request keys; token_idx: (B,) int32
+    index of the token about to be sampled (the request's own count, not
+    the global step). Returns (B, 2) uint32.
+    """
+    return jax.vmap(jax.random.fold_in)(req_keys, token_idx)
+
+
+def sample_tokens(logits: Array, keys: Array, temperature: Array) -> Array:
+    """Select one token per slot. logits: (B, V); keys: (B, 2) uint32;
+    temperature: (B,) — 0 means greedy for that slot. Returns (B,) int32."""
+    logits = logits.astype(jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    temp = jnp.maximum(temperature, 1e-4)[:, None]
+    sampled = jax.vmap(jax.random.categorical)(keys, logits / temp)
+    return jnp.where(temperature > 0.0, sampled.astype(jnp.int32), greedy)

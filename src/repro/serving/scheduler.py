@@ -1,0 +1,299 @@
+"""Continuous-batching scheduler: fixed decode slots over a request queue.
+
+Admission: a pending request is prefilled alone (batch 1) and its
+KV-cache / recurrent-state rows are written into a free slot of the
+shared batch cache (`models.api.cache_batch_axes` finds the batch axis of
+every cache leaf structurally, so the same insertion works for dense,
+MoE, audio, VLM, SSM and hybrid families — for the recurrent families
+the row overwrite IS the per-slot state reset). Its first token is
+sampled from the prefill logits on device.
+
+Decode: one jit'd step advances every slot together — per-slot position
+vector, per-slot temperature, per-slot PRNG key — inside a
+lax.while_loop that only returns control to the host when some slot
+finishes (its own `max_new_tokens` budget or its `eos_id`). Output
+tokens accumulate in a device buffer, so the host syncs once per
+completion event, not once per token. A freed slot is recycled to the
+next queued request immediately.
+
+Ordering guarantees: completions are delivered in completion order;
+requests that finish in the same burst are delivered in submission
+order. Greedy outputs are batch-composition-independent — bit-identical
+whether the request runs alone or in mixed traffic — for every family
+whose per-row compute is independent; the one exception is MoE under
+expert-capacity pressure, where capacity-based dispatch drops tokens by
+*batch-global* count (models.common.moe_ffn), so slot neighbors can
+evict each other's expert assignments exactly as they would in any
+capacity-routed server. Sampled outputs (temperature > 0) are a
+deterministic replay of (base key, submission index since the last
+reseed, token index) — the same submissions after the same reseed
+reproduce the same draws regardless of slot assignment.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.api import Model, cache_batch_axes
+from repro.serving.sampling import request_key, sample_tokens, step_keys
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray           # (S,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0     # 0 => greedy
+    eos_id: int | None = None    # stop early when this token is sampled
+    img_emb: np.ndarray | None = None   # vlm only: (n_img_tokens, d_vision)
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    tokens: np.ndarray           # includes the eos token, if one was sampled
+    # seconds, submit -> harvest. Granularity is the completion *event*:
+    # requests finishing inside the same burst share a timestamp, so under
+    # run()'s drain tail this is an upper bound on true latency
+    latency: float
+
+
+@dataclasses.dataclass
+class _Running:
+    rid: int
+    prompt_len: int
+    max_new: int
+
+
+class Scheduler:
+    """Admits requests from a queue into `n_slots` decode slots.
+
+    submit(request) -> rid; poll() runs one admit/decode/harvest round
+    and returns the newly completed requests; run() polls until idle and
+    returns {rid: Completion} for everything that completed during it.
+    Completions are handed to the caller, not retained — scheduler state
+    stays bounded no matter how long it serves.
+    """
+
+    def __init__(self, cfg: ModelConfig, model: Model, params, *,
+                 n_slots: int = 4, max_len: int = 512, key: Array | None = None):
+        self.cfg, self.model, self.params = cfg, model, params
+        self.n_slots, self.max_len = n_slots, max_len
+        self.max_out = max_len
+        self._axes = cache_batch_axes(model, max_len)
+        self._base_key = key if key is not None else jax.random.PRNGKey(0)
+        self._key_rid0 = 0      # rid the current base key was set at
+        self._next_rid = 0
+        self._queue: deque[tuple[int, Request]] = deque()
+        self._free = list(range(n_slots))
+        self._running: dict[int, _Running] = {}
+        self._submit_time: dict[int, float] = {}    # pending/running only
+        self.stats = {"prefill_tokens": 0, "prefill_s": 0.0, "bursts": 0,
+                      "decode_s": 0.0, "tokens_out": 0, "completed": 0}
+
+        self._cache = model.init_cache(n_slots, max_len)
+        self._state = {
+            "cur": jnp.zeros((n_slots,), jnp.int32),
+            "pos": jnp.zeros((n_slots,), jnp.int32),
+            "active": jnp.zeros((n_slots,), bool),
+            "out_len": jnp.zeros((n_slots,), jnp.int32),
+            "budget": jnp.ones((n_slots,), jnp.int32),
+            "temp": jnp.zeros((n_slots,), jnp.float32),
+            "eos": jnp.full((n_slots,), -1, jnp.int32),
+            "rkey": jnp.zeros((n_slots, 2), jnp.uint32),
+            "outs": jnp.zeros((n_slots, self.max_out), jnp.int32),
+            "done": jnp.zeros((n_slots,), bool),
+            "steps": jnp.int32(0),
+        }
+        self._pkw = ({"max_len": max_len}
+                     if cfg.family in ("dense", "moe", "audio", "vlm") else {})
+        self._admit_jit = jax.jit(
+            lambda p, st, c, t, slot, rkey, b, tp, e: self._admit_impl(
+                p, st, c, t, slot, rkey, b, tp, e, None),
+            donate_argnums=(1, 2))
+        self._admit_img_jit = jax.jit(
+            lambda p, st, c, t, img, slot, rkey, b, tp, e: self._admit_impl(
+                p, st, c, t, slot, rkey, b, tp, e, img),
+            donate_argnums=(1, 2))
+        self._burst = jax.jit(self._burst_impl, donate_argnums=(1, 2),
+                              static_argnums=(3,))
+
+    # -- device-side pieces -------------------------------------------------
+    def _admit_impl(self, params, state, cache, tokens, slot, rkey,
+                    budget, temp, eos, img):
+        """Prefill one request (batch 1), write its cache/state rows into
+        `slot`, and sample its first token — one fused jit call per
+        admission. Scalars are traced, so admission compiles once per
+        prompt-length bucket and never per value."""
+        kw = dict(self._pkw)
+        if img is not None:
+            kw["img_emb"] = img
+        logits1, slot_cache = self.model.prefill(params, tokens, **kw)
+        prompt_len = tokens.shape[1]
+        cache = jax.tree.map(
+            lambda c, s, ax: jax.lax.dynamic_update_slice_in_dim(
+                c, s.astype(c.dtype), slot, axis=ax),
+            cache, slot_cache, self._axes)
+        temp = jnp.asarray(temp, jnp.float32)
+        tok = sample_tokens(logits1, jax.random.fold_in(rkey, 0)[None],
+                            temp[None])[0]
+        finished = (tok == eos) | (budget <= 1)
+        state = {
+            "cur": state["cur"].at[slot].set(tok),
+            "pos": state["pos"].at[slot].set(prompt_len),
+            "active": state["active"].at[slot].set(~finished),
+            "out_len": state["out_len"].at[slot].set(1),
+            "budget": state["budget"].at[slot].set(budget),
+            "temp": state["temp"].at[slot].set(temp),
+            "eos": state["eos"].at[slot].set(eos),
+            "rkey": state["rkey"].at[slot].set(rkey),
+            "outs": state["outs"].at[slot].set(0).at[slot, 0].set(tok),
+            "done": state["done"].at[slot].set(finished),
+            "steps": state["steps"],
+        }
+        return state, cache
+
+    def _burst_impl(self, params, state, cache, drain=False):
+        """Decode every slot until some slot completes (or none is active).
+        The host only sees the loop's final state: one sync per completion
+        event, never per token. With `drain` (queue empty: a freed slot
+        has nothing to recycle to), run until every slot completes — one
+        sync for the whole tail."""
+        rows = jnp.arange(self.n_slots)
+
+        def cond(carry):
+            st, _ = carry
+            go = jnp.any(st["active"])
+            return go if drain else go & ~jnp.any(st["done"])
+
+        def body(carry):
+            st, cache = carry
+            logits, cache = self.model.decode(params, st["cur"], cache,
+                                              st["pos"])
+            keys = step_keys(st["rkey"], st["out_len"])
+            nxt = sample_tokens(logits, keys, st["temp"])
+            act = st["active"]
+            nxt = jnp.where(act, nxt, st["cur"])
+            # inactive rows write out of bounds -> dropped
+            idx = jnp.where(act, st["out_len"], self.max_out)
+            outs = st["outs"].at[rows, idx].set(nxt, mode="drop")
+            out_len = st["out_len"] + act
+            finished = act & ((nxt == st["eos"]) | (out_len >= st["budget"]))
+            st = dict(st, cur=nxt, pos=st["pos"] + act, active=act & ~finished,
+                      out_len=out_len, outs=outs, done=st["done"] | finished,
+                      steps=st["steps"] + 1)
+            return st, cache
+
+        return jax.lax.while_loop(cond, body, (state, cache))
+
+    # -- host-side loop -----------------------------------------------------
+    def reseed(self, key: Array) -> None:
+        """Set the base key for requests submitted from now on. Keys fold
+        the request's index *since this reseed*, so replaying the same
+        requests after the same reseed reproduces the same samples."""
+        self._base_key = key
+        self._key_rid0 = self._next_rid
+
+    def submit(self, req: Request) -> int:
+        prompt = np.asarray(req.prompt, np.int32)
+        assert prompt.ndim == 1 and prompt.size >= 1, "prompt must be (S,)"
+        assert req.max_new_tokens >= 1
+        assert prompt.size + req.max_new_tokens <= self.max_len, \
+            f"{prompt.size}+{req.max_new_tokens} exceeds max_len={self.max_len}"
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append((rid, dataclasses.replace(req, prompt=prompt)))
+        self._submit_time[rid] = time.time()
+        return rid
+
+    @property
+    def idle(self) -> bool:
+        return not self._queue and not self._running
+
+    def _admit(self, slot: int, rid: int, req: Request) -> None:
+        t0 = time.time()
+        tokens = jax.device_put(req.prompt[None])
+        rkey = request_key(self._base_key, rid - self._key_rid0)
+        eos = -1 if req.eos_id is None else int(req.eos_id)
+        if self.cfg.family == "vlm":
+            assert req.img_emb is not None, "vlm request needs img_emb"
+            img = jax.device_put(np.asarray(req.img_emb)[None])
+            self._state, self._cache = self._admit_img_jit(
+                self.params, self._state, self._cache, tokens, img, slot,
+                rkey, req.max_new_tokens, float(req.temperature), eos)
+        else:
+            self._state, self._cache = self._admit_jit(
+                self.params, self._state, self._cache, tokens, slot,
+                rkey, req.max_new_tokens, float(req.temperature), eos)
+        self._running[slot] = _Running(rid, int(req.prompt.size),
+                                       req.max_new_tokens)
+        self.stats["prefill_tokens"] += int(req.prompt.size)
+        self.stats["prefill_s"] += time.time() - t0
+
+    def _harvest(self) -> list[Completion]:
+        """One explicit host transfer of the done/out state; frees and
+        recycles every completed slot."""
+        if not self._running:
+            return []
+        done = jax.device_get(self._state["done"])
+        if not done.any():
+            return []
+        out_len = jax.device_get(self._state["out_len"])
+        outs = jax.device_get(self._state["outs"])
+        slots = [int(s) for s in np.nonzero(done)[0] if int(s) in self._running]
+        completed = []
+        now = time.time()
+        for slot in sorted(slots, key=lambda s: self._running[s].rid):
+            info = self._running.pop(slot)
+            toks = outs[slot, :int(out_len[slot])].astype(np.int32)
+            self.stats["tokens_out"] += int(toks.size)
+            self.stats["completed"] += 1
+            self._free.append(slot)
+            completed.append(Completion(
+                info.rid, toks, now - self._submit_time.pop(info.rid)))
+        idx = jnp.asarray(slots, jnp.int32)
+        self._state = dict(self._state,
+                           done=self._state["done"].at[idx].set(False))
+        return completed
+
+    def poll(self, drain: bool = False) -> list[Completion]:
+        """One scheduling round: admit into free slots, harvest admission
+        completions, else decode until the next completion event. Leave
+        `drain` False when new requests may still arrive (streaming): the
+        burst then yields at every completion so a freed slot can admit
+        them; `run()` passes drain=True for the tail, where nothing can
+        arrive mid-call and one burst finishes every slot."""
+        while self._queue and self._free:
+            rid, req = self._queue.popleft()
+            self._admit(self._free.pop(0), rid, req)
+        completed = self._harvest()
+        if not completed and self._running:
+            t0 = time.time()
+            self._state, self._cache = self._burst(
+                self.params, self._state, self._cache,
+                drain and not self._queue)
+            jax.block_until_ready(self._state["done"])
+            self.stats["decode_s"] += time.time() - t0
+            self.stats["bursts"] += 1
+            completed = self._harvest()
+        return completed
+
+    def run(self) -> dict[int, Completion]:
+        """Poll until every submitted request has completed; return the
+        completions collected along the way."""
+        out: dict[int, Completion] = {}
+        while not self.idle:
+            for c in self.poll(drain=True):
+                out[c.rid] = c
+        return out
+
+    def decode_steps(self) -> int:
+        return int(jax.device_get(self._state["steps"]))

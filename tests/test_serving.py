@@ -1,5 +1,7 @@
 """Serving invariant: prefill + step-by-step decode reproduces the full
-forward pass exactly, for every family with a decode path."""
+forward pass exactly, for every family with a decode path — including
+ragged batches where every row sits at its own offset (the
+continuous-batching slot layout)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,6 +9,7 @@ import pytest
 
 from repro.configs.smoke import smoke_config
 from repro.models import get_model
+from repro.models.api import cache_batch_axes
 from repro.serving.engine import Request, ServingEngine
 
 DECODE_ARCHS = ["qwen2-72b", "musicgen-large", "llama-3.2-vision-11b",
@@ -38,6 +41,55 @@ def test_prefill_decode_matches_full_forward(arch):
         lp, cache = model.decode(params, tokens[:, i], cache, jnp.int32(i))
         np.testing.assert_allclose(np.asarray(lp), np.asarray(full[:, i]),
                                    atol=5e-4, rtol=1e-3)
+
+
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_ragged_prefill_decode_matches_full_forward(arch):
+    """Per-slot positions: prefill two rows alone at staggered offsets
+    (3 vs 9 — the slot-admission path), insert each into the shared batch
+    cache, then decode with a (B,) position vector. Every step must match
+    each row's own full forward pass."""
+    cfg = smoke_config(arch).scaled(quant="none")  # exact-match check
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    b, s_total = 2, 16
+    lens = [3, 9]
+    tokens = jax.random.randint(key, (b, s_total), 0, cfg.vocab)
+    kw = {}
+    if cfg.family == "vlm":
+        kw["img_emb"] = jax.random.normal(
+            key, (b, cfg.n_img_tokens, cfg.d_vision))
+
+    full, _ = model.logits(params, tokens, train=False, **kw)
+
+    axes = cache_batch_axes(model, s_total)
+    cache = model.init_cache(b, s_total)
+    lp_rows = []
+    for j, s in enumerate(lens):
+        pkw = {}
+        if cfg.family in ("dense", "moe", "audio", "vlm"):
+            pkw["max_len"] = s_total
+        if cfg.family == "vlm":
+            pkw["img_emb"] = kw["img_emb"][j:j + 1]
+        lp_j, cache_j = model.prefill(params, tokens[j:j + 1, :s], **pkw)
+        cache = jax.tree.map(
+            lambda c, sl, ax: jax.lax.dynamic_update_slice_in_dim(
+                c, sl.astype(c.dtype), j, axis=ax),
+            cache, cache_j, axes)
+        lp_rows.append(np.asarray(lp_j[0]))
+        np.testing.assert_allclose(lp_rows[j], np.asarray(full[j, s - 1]),
+                                   atol=2e-4, rtol=1e-3)
+
+    pos = jnp.asarray(lens, jnp.int32)
+    for _ in range(s_total - max(lens)):
+        tok = jnp.stack([tokens[j, pos[j]] for j in range(b)])
+        lp, cache = model.decode(params, tok, cache, pos)
+        for j in range(b):
+            np.testing.assert_allclose(
+                np.asarray(lp[j]), np.asarray(full[j, int(pos[j])]),
+                atol=5e-4, rtol=1e-3)
+        pos = pos + 1
 
 
 def test_engine_greedy_generation_deterministic():
