@@ -1,0 +1,40 @@
+"""Append-style benchmark trajectory files: BENCH_<name>.json.
+
+Each file holds a JSON list; every run appends one record
+
+    {"ts": <iso timestamp>, "rows": [{name, us_per_call, derived}, ...],
+     ...extra fields (tok/s, bytes moved, ratios)}
+
+so perf PRs land against a recorded baseline instead of an empty
+trajectory. Files live next to the benchmarks; a malformed/legacy file is
+restarted rather than crashing the run.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
+
+
+def record(name: str, rows=None, **extra) -> str:
+    """Append one trajectory record to BENCH_<name>.json; returns the path."""
+    path = os.path.join(BENCH_DIR, f"BENCH_{name}.json")
+    traj: list = []
+    try:
+        with open(path) as f:
+            loaded = json.load(f)
+        if isinstance(loaded, list):
+            traj = loaded
+    except (OSError, ValueError):
+        pass
+    rec: dict = {"ts": time.strftime("%Y-%m-%dT%H:%M:%S%z"), **extra}
+    if rows is not None:
+        rec["rows"] = [{"name": n, "us_per_call": us, "derived": d}
+                       for n, us, d in rows]
+    traj.append(rec)
+    with open(path, "w") as f:
+        json.dump(traj, f, indent=1)
+        f.write("\n")
+    return path

@@ -1,0 +1,135 @@
+"""Bit-resident layer-chain benchmark: fused packed-I/O epilogue vs the
+unfused packed-GEMM + float-BN + re-sign path.
+
+A chain of L binary dense layers (each followed by inference BN + sign) is
+served two ways:
+
+  unfused — every boundary materializes the GEMM's int32 dot (M*N*4 B) and
+            the post-BN float activation (M*N*4 B) to HBM; the next GEMM
+            re-sign-packs the floats inside the kernel.
+  fused   — binary_gemm_vpu_packed_io applies the freeze-time folded
+            threshold in VMEM and materializes only the packed bitplane
+            (M*ceil(N/32)*4 B): 1 bit/unit between layers.
+
+Reported `derived` columns: activation bytes materialized per layer
+boundary (analytic from shapes — the hardware-independent fact; the
+acceptance bar is fused >= 1.5x fewer) and the fused/unfused ratio. Wall
+time is measured too, but on CPU the Pallas kernels run in interpret mode
+(Python-speed), so tok/s under-reports the TPU path. Both chains are
+asserted bit-identical before timing. Results append to
+BENCH_bit_resident.json (benchmarks/_record.py).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _build_chain(key, depth: int, dim: int):
+    """Random frozen chain: L dense binary layers with folded BN thresholds."""
+    from repro.core.packed import fold_bn_sign_threshold, freeze_params
+    from repro.core.shift_bn import BNParams, BNState
+
+    layers = []
+    for i in range(depth):
+        kk = jax.random.fold_in(key, i)
+        kw, kg, kb, km, kv = jax.random.split(kk, 5)
+        w = jax.random.normal(kw, (dim, dim))
+        bnp = BNParams(gamma=jax.random.normal(kg, (dim,)),
+                       beta=jax.random.normal(kb, (dim,)))
+        bns = BNState(mean=jax.random.normal(km, (dim,)) * 2.0,
+                      var=jax.random.uniform(kv, (dim,), minval=0.2,
+                                             maxval=4.0),
+                      count=jnp.zeros((), jnp.int32))
+        pw = freeze_params({"w": w})["w"]
+        t, f = fold_bn_sign_threshold(bnp.gamma, bnp.beta, bns.mean, bns.var,
+                                      kind="exact")
+        layers.append({"w": pw.with_threshold(t, f, "exact-bn"),
+                       "bn": bnp, "state": bns})
+    return layers
+
+
+def _chain_fns(layers):
+    from repro.core.bitpack import pack_bits
+    from repro.core.shift_bn import batch_norm
+    from repro.kernels.ops import packed_matmul, packed_matmul_fused
+
+    def unfused(x):
+        # every boundary: int32 dot -> HBM, float BN+sign -> HBM, re-pack
+        for lp in layers:
+            ints = packed_matmul(x, lp["w"]).astype(jnp.float32)
+            y, _ = batch_norm(lp["bn"], lp["state"], ints, train=False)
+            x = jnp.where(y >= 0, 1.0, -1.0)
+        return pack_bits(x)                    # comparable wire-format out
+
+    def fused(x):
+        h = x
+        for lp in layers:                      # bits stay bits end-to-end
+            h = packed_matmul_fused(h, lp["w"])
+        return h.packed
+
+    return jax.jit(unfused), jax.jit(fused)
+
+
+def _time_us(fn, x, iters: int) -> float:
+    fn(x).block_until_ready()                  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(x)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(*, smoke: bool = False) -> list[tuple[str, float, str]]:
+    depth, dim = (3, 128) if smoke else (4, 512)
+    iters = 2 if smoke else 5
+    rows = []
+    extra: dict = {}
+    key = jax.random.PRNGKey(0)
+    layers = _build_chain(key, depth, dim)
+
+    for label, m in (("batch", 64 if not smoke else 16), ("decode_m8", 8)):
+        x = jax.random.normal(jax.random.fold_in(key, 1000 + m), (m, dim))
+        unfused, fused = _chain_fns(layers)
+        want = np.asarray(unfused(x))
+        got = np.asarray(fused(x))
+        np.testing.assert_array_equal(want, got)   # oracle gate before timing
+
+        # activation bytes materialized per layer boundary (write+read once)
+        bytes_unfused = 2 * (m * dim * 4 + m * dim * 4)   # int32 + float32
+        bytes_fused = 2 * (m * ((dim + 31) // 32) * 4)    # packed words
+        ratio = bytes_unfused / bytes_fused
+        assert ratio >= 1.5, f"fused must move >=1.5x fewer bytes: {ratio}"
+
+        us_unf = _time_us(unfused, x, iters)
+        us_fus = _time_us(fused, x, iters)
+        toks = m * depth
+        rows.append((f"bit_resident_unfused_{label}", us_unf,
+                     f"{bytes_unfused} B/boundary; "
+                     f"{toks / (us_unf / 1e6):.0f} row-layers/s"))
+        rows.append((f"bit_resident_fused_{label}", us_fus,
+                     f"{bytes_fused} B/boundary ({ratio:.0f}x fewer); "
+                     f"{toks / (us_fus / 1e6):.0f} row-layers/s"))
+        extra[label] = {"m": m, "dim": dim, "depth": depth,
+                        "bytes_per_boundary_unfused": bytes_unfused,
+                        "bytes_per_boundary_fused": bytes_fused,
+                        "bytes_ratio": ratio,
+                        "us_unfused": us_unf, "us_fused": us_fus}
+
+    try:
+        from benchmarks._record import record
+    except ImportError:          # run as a script: benchmarks/ is sys.path[0]
+        from _record import record
+    record("bit_resident", rows, **extra)
+    return rows
+
+
+if __name__ == "__main__":
+    smoke = "--smoke" in sys.argv
+    print("name,us_per_call,derived")
+    for name, us, derived in run(smoke=smoke):
+        print(f"{name},{us:.1f},{derived}")

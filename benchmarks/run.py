@@ -1,6 +1,9 @@
 """Benchmark harness — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,derived`` CSV, and appends each module's rows to
+its trajectory file ``benchmarks/BENCH_<name>.json`` (timestamped records
+— tok/s, bytes moved — so perf PRs land against a recorded baseline; see
+_record.py).
 
   Table 1/2 (energy)      -> bench_energy
   Table 3  (test error)   -> bench_accuracy
@@ -11,30 +14,42 @@ Prints ``name,us_per_call,derived`` CSV.
   §6 deployment (packed)  -> bench_packed_serving
   continuous batching     -> bench_continuous_serving (slot scheduler vs
                              static same-length batches, mixed traffic)
+  bit-resident chain      -> bench_bit_resident (fused packed-I/O epilogue
+                             vs unfused: HBM bytes + wall time per layer)
   roofline (dry-run)      -> src/repro/roofline/report.py (separate: needs
                              the 512-device dryrun_results.jsonl)
 """
 from __future__ import annotations
 
+import os
 import sys
+
+# allow `python benchmarks/run.py` from the repo root: the `benchmarks`
+# package itself must be importable
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def main() -> None:
     from benchmarks import (
-        bench_accuracy, bench_binary_gemm, bench_continuous_serving,
-        bench_convergence, bench_energy, bench_kernel_dedup,
-        bench_packed_serving, bench_saturation,
+        bench_accuracy, bench_binary_gemm, bench_bit_resident,
+        bench_continuous_serving, bench_convergence, bench_energy,
+        bench_kernel_dedup, bench_packed_serving, bench_saturation,
     )
+    from benchmarks._record import record
     mods = [bench_energy, bench_binary_gemm, bench_packed_serving,
-            bench_continuous_serving, bench_kernel_dedup, bench_accuracy,
-            bench_saturation, bench_convergence]
+            bench_continuous_serving, bench_bit_resident, bench_kernel_dedup,
+            bench_accuracy, bench_saturation, bench_convergence]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")
     for mod in mods:
         if only and only not in mod.__name__:
             continue
-        for name, us, derived in mod.run():
-            print(f"{name},{us:.1f},{derived}")
+        rows = mod.run()
+        name = mod.__name__.rsplit(".", 1)[-1].removeprefix("bench_")
+        if mod is not bench_bit_resident:   # it records its own extras
+            record(name, rows)
+        for row_name, us, derived in rows:
+            print(f"{row_name},{us:.1f},{derived}")
 
 
 if __name__ == "__main__":

@@ -84,10 +84,18 @@ class CheckpointManager:
                                  else BINARY_WEIGHT_KEYS)
         leaves, treedef = _flatten(tree)
         names = _leaf_names(tree)
-        host = [PackedWeight(np.asarray(jax.device_get(x.packed)), x.k,
-                             x.kind, x.conv_shape, x.orig_dtype)
-                if isinstance(x, PackedWeight)
-                else np.asarray(jax.device_get(x)) for x in leaves]
+        def to_host(x):
+            if isinstance(x, PackedWeight):
+                return PackedWeight(
+                    np.asarray(jax.device_get(x.packed)), x.k, x.kind,
+                    x.conv_shape, x.orig_dtype,
+                    thresh=None if x.thresh is None
+                    else np.asarray(jax.device_get(x.thresh)),
+                    flip=None if x.flip is None
+                    else np.asarray(jax.device_get(x.flip)), fold=x.fold)
+            return np.asarray(jax.device_get(x))
+
+        host = [to_host(x) for x in leaves]
         if self._thread is not None:
             self._thread.join()  # one outstanding async save max
 
@@ -112,11 +120,16 @@ class CheckpointManager:
             key = f"leaf_{i}"
             if isinstance(arr, PackedWeight):  # runtime wire form, 1 bit/w
                 arrays[key] = np.asarray(arr.packed)
-                manifest["leaves"].append({
+                entry = {
                     "name": name, "key": key, "shape": list(arr.shape),
                     "dtype": arr.orig_dtype, "packed": True,
                     "format": "wire", "kind": arr.kind, "k": arr.k,
-                })
+                }
+                if arr.has_threshold:  # folded epilogue rides with the weight
+                    arrays[f"{key}_thresh"] = np.asarray(arr.thresh)
+                    arrays[f"{key}_flip"] = np.asarray(arr.flip)
+                    entry["fold"] = arr.fold
+                manifest["leaves"].append(entry)
                 continue
             arrays[key] = arr
             manifest["leaves"].append({
@@ -176,6 +189,11 @@ class CheckpointManager:
                 pw = PackedWeight(
                     jnp.asarray(arr), entry["k"], entry.get("kind", "dense"),
                     tuple(entry["shape"]) if conv else None, entry["dtype"])
+                if entry.get("fold"):  # restore the bit-resident epilogue too
+                    pw = pw.with_threshold(
+                        jnp.asarray(data[entry["key"] + "_thresh"]),
+                        jnp.asarray(data[entry["key"] + "_flip"]),
+                        entry["fold"])
                 leaves.append(pw.unpack() if unpack else pw)
                 continue
             if entry["packed"]:  # legacy layout: packed along last axis
@@ -186,9 +204,12 @@ class CheckpointManager:
         tree = jax.tree_util.tree_unflatten(treedef, leaves)
         if shardings is not None:
             def put(x, s):
-                if isinstance(x, PackedWeight):  # shard the wire words
+                if isinstance(x, PackedWeight):  # shard the wire words; the
+                    # tiny (..., N) threshold vectors stay replicated
                     return PackedWeight(jax.device_put(x.packed, s), x.k,
-                                        x.kind, x.conv_shape, x.orig_dtype)
+                                        x.kind, x.conv_shape, x.orig_dtype,
+                                        thresh=x.thresh, flip=x.flip,
+                                        fold=x.fold)
                 return jax.device_put(x, s)
             tree = jax.tree.map(put, tree, shardings, is_leaf=_is_packed)
         return tree

@@ -25,7 +25,8 @@ import jax.numpy as jnp
 
 from repro.core.binarize import binarize, binary_act, hard_tanh
 from repro.core.packed import (
-    PackedWeight, freeze_params, params_frozen, unfreeze_params,
+    PackedActivation, PackedWeight, freeze_params, params_frozen,
+    unfreeze_params,
 )
 
 Array = jax.Array
@@ -61,14 +62,16 @@ def quant_acts(x: Array, mode: QuantMode, *, train: bool,
     raise ValueError(mode)
 
 
-def packed_qmatmul(x: Array, w: PackedWeight, mode: QuantMode, *,
-                   train: bool = False) -> Array:
+def packed_qmatmul(x: Array | PackedActivation, w: PackedWeight,
+                   mode: QuantMode, *, train: bool = False) -> Array:
     """x @ w for a weight frozen to 1-bit at load time (inference only).
 
     BBP/BBP_DET (binary activations): XNOR+popcount against the pre-packed
-    words — no fp32 weight is ever materialized. BC (fp activations):
-    unpack to +-1 and run the fp matmul (weights were binary already, so
-    this is still bit-exact with the master-weight path).
+    words — no fp32 weight is ever materialized. x may itself be a
+    PackedActivation (bit-resident chain / shared QKV packing): the GEMM
+    then consumes the wire-format words directly, no re-pack. BC (fp
+    activations): unpack to +-1 and run the fp matmul (weights were binary
+    already, so this is still bit-exact with the master-weight path).
     """
     if train:
         raise ValueError(
@@ -78,24 +81,50 @@ def packed_qmatmul(x: Array, w: PackedWeight, mode: QuantMode, *,
         raise ValueError("params are frozen to 1-bit but quant mode is "
                          "'none'; packed weights require a binary mode")
     if mode == QuantMode.BC:
+        if isinstance(x, PackedActivation):
+            raise ValueError("BC consumes full-precision activations — a "
+                             "PackedActivation lhs only carries sign bits")
         return jnp.matmul(x, w.unpack(x.dtype))
     # binary activations: pure bitwise serving path
     from repro.kernels.ops import packed_matmul  # local: avoids import cycle
     return packed_matmul(x, w).astype(x.dtype)
 
 
-def qmatmul(x: Array, w: Array | PackedWeight, mode: QuantMode, *,
-            train: bool = False, key: Array | None = None,
-            precision=None) -> Array:
+def packed_qmatmul_fused(x: Array | PackedActivation, w: PackedWeight,
+                        mode: QuantMode, *, train: bool = False,
+                        thresh: Array | None = None,
+                        flip: Array | None = None) -> PackedActivation:
+    """One bit-resident layer step (inference only): popcount GEMM whose
+    epilogue applies the folded threshold (BN/bias + sign) — w's
+    freeze-time fold, or an explicit (thresh, flip) re-folded from the
+    statistics actually in effect — and emits the next layer's
+    PackedActivation: activations never leave the bit domain between
+    binary layers."""
+    if train:
+        raise ValueError("bit-resident chains serve inference only")
+    if mode not in (QuantMode.BBP, QuantMode.BBP_DET):
+        raise ValueError("the fused epilogue binarizes its output; it "
+                         "requires a binary-activation mode")
+    from repro.kernels.ops import packed_matmul_fused  # avoids import cycle
+    return packed_matmul_fused(x, w, thresh=thresh, flip=flip)
+
+
+def qmatmul(x: Array | PackedActivation, w: Array | PackedWeight,
+            mode: QuantMode, *, train: bool = False,
+            key: Array | None = None, precision=None) -> Array:
     """Quantized x @ w with the mode's weight/activation treatment.
 
-    x: (..., K), w: (K, N) fp32 master, or a PackedWeight frozen by
-    core.packed.freeze_params (dispatches to the packed serving path).
-    Keys are split internally for weight vs activation noise (independent
-    binarization noise, paper §2).
+    x: (..., K) — or a PackedActivation (sign bits packed once, shared by
+    several consumers) when w is frozen; w: (K, N) fp32 master, or a
+    PackedWeight frozen by core.packed.freeze_params (dispatches to the
+    packed serving path). Keys are split internally for weight vs
+    activation noise (independent binarization noise, paper §2).
     """
     if isinstance(w, PackedWeight):
         return packed_qmatmul(x, w, mode, train=train)
+    if isinstance(x, PackedActivation):
+        raise ValueError("PackedActivation lhs requires a frozen "
+                         "PackedWeight rhs")
     kw = ka = None
     if key is not None:
         kw, ka = jax.random.split(key)
@@ -106,6 +135,19 @@ def qmatmul(x: Array, w: Array | PackedWeight, mode: QuantMode, *,
     # collective traffic (EXPERIMENTS.md §Perf)
     wq = quant_weights(w.astype(xq.dtype), mode, train=train, key=kw)
     return jnp.matmul(xq, wq, precision=precision)
+
+
+def shared_pack(x: Array, weights, mode: QuantMode, *,
+                train: bool = False) -> Array | PackedActivation:
+    """Sign-pack a float activation ONCE when every consumer is a frozen
+    binary weight (inference): the consumers' popcount GEMMs then read the
+    1-bit wire format instead of each re-packing the float tensor — e.g.
+    one pack of the normed residual feeds Q, K and V. Falls through to the
+    float tensor whenever any consumer still needs it."""
+    if (not train and mode in (QuantMode.BBP, QuantMode.BBP_DET)
+            and all(isinstance(w, PackedWeight) for w in weights)):
+        return PackedActivation.pack(x)
+    return x
 
 
 class DenseParams(NamedTuple):

@@ -20,10 +20,24 @@ logical tensor:
 PackedWeight. The quantize step thereby moves from per-call to load-time:
 ~32x smaller resident weights and no re-binarization in the serving path.
 
-PackedWeight is a registered pytree node (the packed words are the only
-array child; k/kind/shape/dtype ride in the static aux), so frozen trees
-pass through `jax.jit`, `lax.scan`, `device_put`, and checkpointing
-unchanged.
+PackedWeight is a registered pytree node (packed words and the optional
+fused-epilogue thresholds are the array children; k/kind/shape/dtype ride
+in the static aux), so frozen trees pass through `jax.jit`, `lax.scan`,
+`device_put`, and checkpointing unchanged.
+
+Bit-resident serving (the fused-epilogue chain) adds two pieces here:
+
+  * `PackedActivation` — the inter-layer value of a bit-resident chain:
+    sign bits of an activation tensor in the same wire format, produced by
+    the fused kernel epilogue and consumed directly by the next layer's
+    popcount GEMM. Between binary layers nothing wider than 1 bit/unit
+    ever touches HBM.
+  * `fold_*_sign_threshold` — freeze-time folding of everything between a
+    binary GEMM and the next sign() into a per-channel integer threshold
+    on the raw popcount dot. Works because the dot is an integer and every
+    inference-time epilogue in this codebase (exact BN, shift-BN, bias,
+    monotone fixed shifts) is a per-channel monotone affine of it:
+    sign(s*(dot - mean) + beta) collapses to (dot >= t) XOR flip.
 """
 from __future__ import annotations
 
@@ -34,6 +48,10 @@ import numpy as np
 from repro.core.bitpack import pack_bits, unpack_bits
 
 Array = jax.Array
+
+# threshold value that makes (dot >= t) true for every reachable dot
+# (|dot| <= K < 2^31): used for constant-bit channels and N-padding.
+ALWAYS_THRESH = -(2**31) + 1
 
 # dict keys of weights that are binarized in the forward pass — everything
 # routed through qmatmul / binary_conv2d, and only that. NOTE: this is a
@@ -48,26 +66,54 @@ BINARY_WEIGHT_KEYS = frozenset({
 
 @jax.tree_util.register_pytree_node_class
 class PackedWeight:
-    """A frozen 1-bit weight: packed sign words + logical metadata."""
+    """A frozen 1-bit weight: packed sign words + logical metadata.
+
+    Optionally carries the fused-epilogue threshold of the layer's
+    *output*: `thresh`/`flip` (..., N) int32 such that the next layer's
+    input bit for channel n is (dot_n >= thresh_n) XOR flip_n. `fold`
+    names what was folded ("exact-bn" | "shift-bn" | "bias" | an act tag)
+    so forward passes can verify the fold matches their configuration.
+    """
 
     def __init__(self, packed: Array, k: int, kind: str = "dense",
                  conv_shape: tuple[int, ...] | None = None,
-                 orig_dtype: str = "float32"):
+                 orig_dtype: str = "float32", thresh: Array | None = None,
+                 flip: Array | None = None, fold: str | None = None):
         self.packed = packed          # (..., N, KW) uint32 wire-format words
         self.k = int(k)               # true contraction length (pre-padding)
         self.kind = kind              # "dense" | "conv"
         self.conv_shape = tuple(conv_shape) if conv_shape else None
         self.orig_dtype = str(orig_dtype)
+        self.thresh = thresh          # (..., N) int32 | None
+        self.flip = flip              # (..., N) int32 (0/1) | None
+        self.fold = fold              # what the threshold folds, or None
 
     # ---------------------------------------------------------- pytree node
     def tree_flatten(self):
-        return (self.packed,), (self.k, self.kind, self.conv_shape,
-                                self.orig_dtype)
+        return (self.packed, self.thresh, self.flip), (
+            self.k, self.kind, self.conv_shape, self.orig_dtype, self.fold)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        k, kind, conv_shape, orig_dtype = aux
-        return cls(children[0], k, kind, conv_shape, orig_dtype)
+        k, kind, conv_shape, orig_dtype, fold = aux
+        packed, thresh, flip = children
+        return cls(packed, k, kind, conv_shape, orig_dtype,
+                   thresh=thresh, flip=flip, fold=fold)
+
+    # ----------------------------------------------------- fused thresholds
+    @property
+    def has_threshold(self) -> bool:
+        return self.thresh is not None
+
+    def with_threshold(self, thresh: Array, flip: Array,
+                       fold: str) -> "PackedWeight":
+        """Attach a freeze-time folded output threshold (see module doc)."""
+        n = self.packed.shape[:-1]    # (..., N)
+        assert thresh.shape == n and flip.shape == n, (thresh.shape, n)
+        return PackedWeight(self.packed, self.k, self.kind, self.conv_shape,
+                            self.orig_dtype,
+                            thresh=thresh.astype(jnp.int32),
+                            flip=flip.astype(jnp.int32), fold=fold)
 
     # ------------------------------------------------------------- metadata
     @property
@@ -83,11 +129,15 @@ class PackedWeight:
 
     @property
     def nbytes(self) -> int:
-        return int(np.prod(self.packed.shape, dtype=np.int64)) * 4
+        nb = int(np.prod(self.packed.shape, dtype=np.int64)) * 4
+        if self.thresh is not None:   # folded epilogue rides with the weight
+            nb += int(self.thresh.nbytes) + int(self.flip.nbytes)
+        return nb
 
     def __repr__(self):
+        tag = f", fold={self.fold!r}" if self.fold else ""
         return (f"PackedWeight(kind={self.kind!r}, shape={self.shape}, "
-                f"packed={tuple(self.packed.shape)} uint32)")
+                f"packed={tuple(self.packed.shape)} uint32{tag})")
 
     # --------------------------------------------------------------- unpack
     def unpack(self, dtype=None) -> Array:
@@ -98,6 +148,117 @@ class PackedWeight:
             kh, kw, cin, cout = self.conv_shape
             return flat.reshape(cout, cin, kh, kw).transpose(2, 3, 1, 0)
         return jnp.swapaxes(flat, -1, -2)
+
+
+@jax.tree_util.register_pytree_node_class
+class PackedActivation:
+    """Sign bits of an activation tensor in the kernel wire format.
+
+    The inter-layer value of a bit-resident chain: `packed` is (..., KW)
+    uint32 with pad bits 1 (+1), `k` the true feature dim. Produced either
+    by `pack()` (chain entry / shared QKV packing) or by the fused kernel
+    epilogue, and consumed directly as the lhs of the next popcount GEMM.
+    """
+
+    def __init__(self, packed: Array, k: int, dtype: str = "float32"):
+        self.packed = packed          # (..., KW) uint32 wire-format words
+        self.k = int(k)               # true feature dim (pre-padding)
+        self.dtype = str(dtype)       # dtype dense results are cast back to
+
+    def tree_flatten(self):
+        return (self.packed,), (self.k, self.dtype)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], *aux)
+
+    @classmethod
+    def pack(cls, x: Array) -> "PackedActivation":
+        """Sign-pack a float activation once, to be reused by every GEMM
+        that consumes it (e.g. one pack feeds Q, K and V)."""
+        return cls(pack_bits(x), k=x.shape[-1], dtype=x.dtype)
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        """Logical (unpacked) shape."""
+        return tuple(self.packed.shape[:-1]) + (self.k,)
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.prod(self.packed.shape, dtype=np.int64)) * 4
+
+    def unpack(self, dtype=None) -> Array:
+        """Materialize the logical +-1 tensor (tests / BC fallback)."""
+        return unpack_bits(self.packed, self.k, dtype=dtype or self.dtype)
+
+    def __repr__(self):
+        return (f"PackedActivation(shape={self.shape}, "
+                f"packed={tuple(self.packed.shape)} uint32)")
+
+
+# ---------------------------------------------------------------------------
+# Freeze-time threshold folding: (whatever sits between a binary GEMM and
+# the next sign()) -> per-channel integer threshold on the popcount dot.
+#
+# All inference-time epilogues here have the form y = s*(dot - mean) + beta
+# with per-channel constants; sign(y) >= 0 over an *integer* dot collapses
+# to (dot >= t) XOR flip with t int32:
+#     s > 0:  y >= 0  <=>  dot >= mean - beta/s  <=>  dot >= ceil(c)
+#     s < 0:  y >= 0  <=>  dot <= c              <=>  NOT(dot >= floor(c)+1)
+#     s == 0: y = beta — a constant bit.
+# ---------------------------------------------------------------------------
+def _affine_sign_threshold(s: Array, mean: Array, beta: Array
+                           ) -> tuple[Array, Array]:
+    c = mean - beta / jnp.where(s == 0, 1.0, s)
+    c = jnp.clip(c, float(-(2**31) + 2), float(2**31 - 2))
+    t = jnp.where(s > 0, jnp.ceil(c), jnp.floor(c) + 1).astype(jnp.int32)
+    flip = (s < 0).astype(jnp.int32)
+    t = jnp.where(s == 0, jnp.int32(ALWAYS_THRESH), t)
+    flip = jnp.where(s == 0, (beta < 0).astype(jnp.int32), flip)
+    return t, flip
+
+
+def fold_bn_sign_threshold(gamma: Array, beta: Array, mean: Array,
+                           var: Array, *, kind: str = "shift",
+                           eps: float = 1e-4) -> tuple[Array, Array]:
+    """Fold inference-time (shift-)BN + sign into (thresh, flip).
+
+    kind='exact':  y = (dot - mean) * rsqrt(var+eps) * gamma + beta
+    kind='shift':  y = (dot - mean) * AP2(rsqrt(var+eps)) * AP2(gamma) + beta
+                   (core.shift_bn Eq. 9-10 at inference; the AP2 factors
+                   are exact powers of two, so the fold is bit-exact)
+    Returns per-channel int32 (thresh, flip): next-layer input bit is
+    (dot >= thresh) XOR flip == (sign(y) == +1), with sign(0) := +1.
+    """
+    inv = jax.lax.rsqrt(var + eps)
+    if kind == "shift":
+        from repro.core.ap2 import ap2
+        s = ap2(inv) * ap2(gamma)
+    elif kind == "exact":
+        s = inv * gamma
+    else:
+        raise ValueError(kind)
+    return _affine_sign_threshold(s, mean, beta)
+
+
+def fold_bias_sign_threshold(b: Array) -> tuple[Array, Array]:
+    """Fold (dot + b) * positive_scale >= 0 into (thresh, flip) — the paper
+    MLP's epilogue (bias + fixed AP2 shift, no BN). Exact for integer dots:
+    dot + b >= 0  <=>  dot >= ceil(-b)."""
+    t = jnp.ceil(-b).astype(jnp.int32)
+    return t, jnp.zeros_like(t)
+
+
+def fold_act_sign_threshold(n_or_shape, act: str) -> tuple[Array, Array]:
+    """Fold sign(act(dot)) for activations whose sign is a pure threshold
+    of the integer dot. 'sq_relu': relu(dot)^2 >= 0 always, a constant +1
+    bit (exactly what binarize(relu(z)^2) yields unfused)."""
+    shape = (n_or_shape,) if isinstance(n_or_shape, int) else tuple(n_or_shape)
+    if act == "sq_relu":
+        return (jnp.full(shape, ALWAYS_THRESH, jnp.int32),
+                jnp.zeros(shape, jnp.int32))
+    raise ValueError(f"activation {act!r} has no exact integer-threshold "
+                     "fold (e.g. fp32 tanh-gelu saturates to -0.0)")
 
 
 def _pack_dense(w: Array) -> PackedWeight:
@@ -135,6 +296,30 @@ def freeze_params(params, keys: frozenset[str] | set[str] = BINARY_WEIGHT_KEYS):
 
     return jax.tree_util.tree_map_with_path(
         leaf, params, is_leaf=lambda x: isinstance(x, PackedWeight))
+
+
+def attach_ffn_act_thresholds(params, act: str = "sq_relu"):
+    """Attach freeze-time activation thresholds to every non-GLU FFN
+    up-projection in a frozen tree (dicts holding PackedWeight w_up/w_down,
+    no w_gate), so ffn() serves the block bit-resident: the up-projection's
+    fused epilogue emits the exact bits of binarize(act(dot)) and the
+    down-projection consumes them as packed words."""
+    def walk(node):
+        if isinstance(node, dict):
+            out = {kk: walk(v) for kk, v in node.items()}
+            wu = out.get("w_up")
+            if (isinstance(wu, PackedWeight) and "w_gate" not in out
+                    and isinstance(out.get("w_down"), PackedWeight)):
+                t, f = fold_act_sign_threshold(wu.packed.shape[:-1], act)
+                out["w_up"] = wu.with_threshold(t, f, f"act:{act}")
+            return out
+        if isinstance(node, tuple) and hasattr(node, "_fields"):
+            return type(node)(*(walk(v) for v in node))   # NamedTuple
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return node
+
+    return walk(params)
 
 
 def unfreeze_params(params, dtype=None):

@@ -6,17 +6,19 @@ ref.py         — pure-jnp oracles the kernels are tested against
 """
 from repro.kernels.ops import (
     binary_matmul, binary_matmul_vpu, binary_matmul_mxu, binary_conv2d,
-    packed_matmul, packed_conv2d,
+    packed_matmul, packed_matmul_fused, packed_conv2d,
 )
 from repro.kernels.binary_gemm import (
     binary_gemm_vpu, binary_gemm_mxu, binary_gemm_vpu_packed,
+    binary_gemm_vpu_packed_io,
 )
 from repro.kernels.selective_scan import selective_scan
 from repro.kernels.pack import pack_bits_kernel
 
 __all__ = [
     "binary_matmul", "binary_matmul_vpu", "binary_matmul_mxu",
-    "binary_conv2d", "packed_matmul", "packed_conv2d",
+    "binary_conv2d", "packed_matmul", "packed_matmul_fused", "packed_conv2d",
     "binary_gemm_vpu", "binary_gemm_mxu", "binary_gemm_vpu_packed",
+    "binary_gemm_vpu_packed_io",
     "selective_scan", "pack_bits_kernel",
 ]

@@ -14,6 +14,15 @@ TPU-native adaptation of the paper's CUDA binary GEMM (DESIGN.md §4):
     round-trip of materialized sign tensors; on v5e the MXU path wins for
     large N (roofline discussion in EXPERIMENTS.md).
 
+  * `binary_gemm_vpu_packed_io` — the bit-resident serving kernel: packed
+    (or first-layer float) lhs against frozen packed weights, with the
+    whole inter-layer epilogue fused: dot = K - 2*acc, per-channel int32
+    threshold compare (inference BN/shift-BN/bias + sign folded at freeze
+    time, core.packed.fold_*_sign_threshold), and the N-axis bitpack.
+    Output is (M, ceil(N/32)) uint32 in the wire format, so the next
+    binary layer consumes it directly — no int32/float activation ever
+    round-trips through HBM between binary layers.
+
 Block shapes are multiples of (8, 128) for VPU register tiling and 128x128
 for the MXU. Grids iterate K innermost ("arbitrary") so output blocks are
 revisited for accumulation.
@@ -27,7 +36,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.bitpack import pack_bits
+from repro.core.bitpack import WORD, pack_bits
+from repro.core.packed import ALWAYS_THRESH
 from repro.kernels._compat import CompilerParams as _CompilerParams
 
 Array = jax.Array
@@ -171,6 +181,107 @@ def binary_gemm_vpu_packed(a: Array, b_packed: Array, k_true: int, *,
 
 
 # ---------------------------------------------------------------------------
+# Bit-resident kernel: packed-I/O GEMM with the fused BN+sign+repack epilogue.
+#
+# The lhs is either already wire-format words (every binary layer after the
+# first) or floats sign-packed in VMEM (the chain entry). The epilogue never
+# leaves VMEM: dot = K - 2*acc, then bit_n = (dot >= t_n) XOR flip_n — the
+# per-channel int32 threshold that core.packed folds from inference-time
+# BN / shift-BN / bias + sign at freeze time — then the bits repack along N
+# into uint32 words. Inter-layer activation traffic drops from 4 bytes/unit
+# (int32) to 1 bit/unit.
+#
+# K is kept whole per block (KW = K/32 words is small by construction), so
+# the grid is (M, N)-parallel only and no cross-step accumulator state is
+# needed.
+# ---------------------------------------------------------------------------
+def _fused_epilogue_kernel(a_ref, b_ref, t_ref, f_ref, o_ref, *, k_true: int,
+                           kw: int, packed_lhs: bool):
+    """a_ref: (bm, kw) uint32 | (bm, kw*32) float; b_ref: (bn, kw) uint32;
+    t_ref/f_ref: (1, bn) int32; o_ref: (bm, bn//32) uint32."""
+    aw = a_ref[...] if packed_lhs else pack_bits(a_ref[...])   # (bm, kw)
+    b = b_ref[...]
+    bm = aw.shape[0]
+    bn = b.shape[0]
+
+    def body(w, acc):
+        x = jnp.bitwise_xor(aw[:, w][:, None], b[:, w][None, :])
+        return acc + jax.lax.population_count(x).astype(jnp.int32)
+
+    acc = jax.lax.fori_loop(0, kw, body,
+                            jnp.zeros((bm, bn), jnp.int32))
+    dot = jnp.int32(k_true) - 2 * acc
+    bits = (dot >= t_ref[...]) != (f_ref[...] != 0)            # (bm, bn) bool
+    words = bits.reshape(bm, bn // WORD, WORD).astype(jnp.uint32)
+    weights = jnp.uint32(1) << jnp.arange(WORD, dtype=jnp.uint32)
+    o_ref[...] = jnp.sum(words * weights, axis=-1, dtype=jnp.uint32)
+
+
+def binary_gemm_vpu_packed_io(a: Array, b_packed: Array, thresh: Array,
+                              flip: Array, k_true: int, *, bm: int = 128,
+                              bn: int = 128,
+                              interpret: bool | None = None) -> Array:
+    """XNOR-popcount GEMM whose epilogue emits wire-format sign words.
+
+    a: (M, KW) uint32 packed lhs (wire format, pad bits 1) or (M, K) float
+    (chain entry: sign-packed in VMEM). b_packed: (N, KW) uint32 frozen
+    weights. thresh/flip: (N,) int32 — bit_n = (dot_n >= thresh_n) XOR
+    flip_n. Returns (M, ceil(N/32)) uint32 whose pad bits are 1 (+1), i.e.
+    exactly the lhs operand of the next binary layer.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    packed_lhs = a.dtype == jnp.uint32
+    n, kw = b_packed.shape
+    assert thresh.shape == (n,) and flip.shape == (n,), (thresh.shape, n)
+    m = a.shape[0]
+    if packed_lhs:
+        assert a.shape[1] == kw, (a.shape, kw)
+    else:
+        assert a.shape[1] == k_true and kw * WORD >= k_true, (a.shape, k_true)
+        # pad lhs K up to full words with +1.0 — matches the wire-format pad
+        # bits of b, so xor(pad, pad) == 0 contributes nothing
+        if kw * WORD - k_true:
+            a = jnp.pad(a, ((0, 0), (0, kw * WORD - k_true)),
+                        constant_values=1.0)
+    bm = min(bm, m)
+    assert bn % WORD == 0, f"bn must be a multiple of {WORD} (N repack): {bn}"
+    bn = min(bn, ((n + WORD - 1) // WORD) * WORD)   # multiple of 32 for repack
+    pm, pn = (-m) % bm, (-n) % bn
+    if pm:
+        a = jnp.pad(a, ((0, pm), (0, 0)),
+                    constant_values=0 if packed_lhs else -1.0)
+    if pn:
+        b_packed = jnp.pad(b_packed, ((0, pn), (0, 0)))
+        # padded output channels must emit bit 1 (+1): that is the wire
+        # format's pad convention, which the next layer's weight pad bits
+        # cancel against. ALWAYS_THRESH makes (dot >= t) always true.
+        thresh = jnp.pad(thresh, (0, pn), constant_values=ALWAYS_THRESH)
+        flip = jnp.pad(flip, (0, pn))
+    gm, gn = a.shape[0] // bm, b_packed.shape[0] // bn
+
+    out = pl.pallas_call(
+        functools.partial(_fused_epilogue_kernel, k_true=k_true, kw=kw,
+                          packed_lhs=packed_lhs),
+        grid=(gm, gn),
+        in_specs=[
+            pl.BlockSpec((bm, kw if packed_lhs else kw * WORD),
+                         lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, kw), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn // WORD), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(
+            (a.shape[0], b_packed.shape[0] // WORD), jnp.uint32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(a, b_packed, thresh[None, :], flip[None, :])
+    return out[:m, :(n + WORD - 1) // WORD]
+
+
+# ---------------------------------------------------------------------------
 # MXU fused binarize + matmul kernel (float in, +-1 bf16 on the MXU)
 # ---------------------------------------------------------------------------
 def _mxu_kernel(x_ref, w_ref, o_ref, *, nk: int):
@@ -197,11 +308,10 @@ def binary_gemm_mxu(x: Array, w: Array, *, bm: int = 128, bn: int = 128,
     bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
     pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
     if pm or pk:
-        # pad x with -1 and w with +1 rows: sign(-1)*sign(+1) = -1 ... would
-        # corrupt the dot, so pad BOTH K-extensions with zeros and fix below.
-        # Simpler: pad K with x=+1, w rows alternating is wrong; instead pad
-        # x K-cols with +1 and w K-rows with +1 => each pad adds +1 to the
-        # dot; subtract pk afterwards.
+        # K padding scheme: pad x's K-cols AND w's K-rows with +1.0, so each
+        # pad position contributes sign(+1)*sign(+1) = +1 to every dot;
+        # subtract the constant pk from the output afterwards. (M/N padding
+        # rows/cols are simply sliced off.)
         x = jnp.pad(x, ((0, pm), (0, pk)), constant_values=1.0)
     if pn or pk:
         w = jnp.pad(w, ((0, pk), (0, pn)), constant_values=1.0)

@@ -17,11 +17,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.binarize import ste_mask
-from repro.core.bitpack import pack_bits
-from repro.core.packed import PackedWeight
+from repro.core.bitpack import pack_bits, packed_width
+from repro.core.packed import PackedActivation, PackedWeight
 from repro.kernels import ref
 from repro.kernels.binary_gemm import (
     binary_gemm_mxu, binary_gemm_vpu, binary_gemm_vpu_packed,
+    binary_gemm_vpu_packed_io,
 )
 
 Array = jax.Array
@@ -84,16 +85,29 @@ def binary_matmul_mxu(x: Array, w: Array) -> Array:
 # time (core.packed); per call only the activations are sign-packed, fused
 # inside the kernel. Inference-only — no custom_vjp, by design.
 # ---------------------------------------------------------------------------
-def packed_matmul(x: Array, w: PackedWeight, *, path: str = "vpu") -> Array:
+def packed_matmul(x: Array | PackedActivation, w: PackedWeight, *,
+                  path: str = "vpu") -> Array:
     """sign(x) @ frozen-sign(w) from pre-packed weights.
 
-    x: (..., K) float; w: a PackedWeight whose wire matrix is (N, KW) —
-    a dense weight, or a conv weight against im2col'd activations.
-    Returns (..., N) int32 (exact popcount arithmetic); callers cast.
+    x: (..., K) float, or a PackedActivation already in the wire format
+    (bit-resident chain: the lhs never re-packs); w: a PackedWeight whose
+    wire matrix is (N, KW) — a dense weight, or a conv weight against
+    im2col'd activations. Returns (..., N) int32 (exact popcount
+    arithmetic); callers cast.
     """
     assert w.packed.ndim == 2, w
-    k = x.shape[-1]
+    k = x.k if isinstance(x, PackedActivation) else x.shape[-1]
     assert k == w.k, (k, w.k)
+    if isinstance(x, PackedActivation):
+        lead = x.packed.shape[:-1]
+        a2 = x.packed.reshape(-1, x.packed.shape[-1])
+        if path == "vpu":
+            out = binary_gemm_vpu(a2, w.packed, k)
+        elif path == "ref":
+            out = ref.binary_matmul_packed_ref(a2, w.packed, k)
+        else:
+            raise ValueError(path)
+        return out.reshape(lead + (w.packed.shape[0],))
     lead = x.shape[:-1]
     x2 = x.reshape(-1, k)
     if path == "vpu":
@@ -103,6 +117,49 @@ def packed_matmul(x: Array, w: PackedWeight, *, path: str = "vpu") -> Array:
     else:
         raise ValueError(path)
     return out.reshape(lead + (w.packed.shape[0],))
+
+
+def packed_matmul_fused(x: Array | PackedActivation, w: PackedWeight, *,
+                        thresh: Array | None = None,
+                        flip: Array | None = None,
+                        path: str = "vpu") -> PackedActivation:
+    """One bit-resident chain step: popcount GEMM + fused epilogue.
+
+    The layer's inference epilogue (BN / shift-BN / bias + sign) is a
+    per-channel (thresh, flip) pair on the integer dot — folded into
+    w.thresh/w.flip at freeze time, or passed explicitly (e.g. re-folded
+    from the running BN statistics the caller is actually serving with).
+    The kernel emits the next layer's packed lhs directly — (...,
+    ceil(N/32)) uint32, never a float or int32 activation. x: float (chain
+    entry, sign-packed in VMEM) or the previous step's PackedActivation.
+    """
+    if thresh is None:
+        assert w.has_threshold, w
+        thresh, flip = w.thresh, w.flip
+    elif flip is None:
+        flip = jnp.zeros_like(thresh)      # plain (dot >= t), no inversion
+    thresh = thresh.astype(jnp.int32)
+    flip = flip.astype(jnp.int32)
+    assert w.packed.ndim == 2, w
+    if isinstance(x, PackedActivation):
+        assert x.k == w.k, (x.k, w.k)
+        lead, dtype = x.packed.shape[:-1], x.dtype
+        a2 = x.packed.reshape(-1, x.packed.shape[-1])
+    else:
+        assert x.shape[-1] == w.k, (x.shape, w.k)
+        lead, dtype = x.shape[:-1], x.dtype
+        a2 = x.reshape(-1, w.k)
+    if path == "vpu":
+        out = binary_gemm_vpu_packed_io(a2, w.packed, thresh, flip, w.k)
+    elif path == "ref":
+        if not isinstance(x, PackedActivation):
+            a2 = pack_bits(a2)
+        out = ref.binary_matmul_fused_ref(a2, w.packed, thresh, flip, w.k)
+    else:
+        raise ValueError(path)
+    n = w.packed.shape[0]
+    return PackedActivation(out.reshape(lead + (packed_width(n),)), k=n,
+                            dtype=dtype)
 
 
 def packed_conv2d(x: Array, w: PackedWeight, *, path: str = "vpu") -> Array:

@@ -29,6 +29,17 @@ def binary_matmul_packed_ref(a_packed: Array, b_packed: Array, k: int) -> Array:
     return packed_dot(a_packed[:, None, :], b_packed[None, :, :], k)
 
 
+def binary_matmul_fused_ref(a_packed: Array, b_packed: Array, thresh: Array,
+                            flip: Array, k: int) -> Array:
+    """Oracle for the fused packed-I/O epilogue (binary_gemm_vpu_packed_io):
+    popcount dot -> per-channel threshold bit -> wire-format repack along N.
+    a_packed: (M, KW) uint32, b_packed: (N, KW) uint32, thresh/flip: (N,)
+    int32. Returns (M, ceil(N/32)) uint32, pad bits 1."""
+    ints = packed_dot(a_packed[:, None, :], b_packed[None, :, :], k)  # (M, N)
+    bits = (ints >= thresh[None, :]) != (flip[None, :] != 0)
+    return pack_bits(jnp.where(bits, 1.0, -1.0))
+
+
 def binary_conv2d_ref(x: Array, w: Array) -> Array:
     """Oracle for ops.binary_conv2d: conv(sign(x), sign(w)) with SAME-size
     output and +1-valued border padding (binarized padding convention —

@@ -19,7 +19,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.packed import freeze_params, params_frozen
+from repro.core.packed import (
+    attach_ffn_act_thresholds, freeze_params, params_frozen,
+)
 from repro.models import ssm_lm
 from repro.models import transformer as T
 
@@ -41,12 +43,19 @@ class Model:
 
         prefill/decode/logits dispatch per-leaf: a PackedWeight leaf routes
         its matmul through the XNOR+popcount packed kernel, so the same
-        Model callables serve both fp-master and frozen params.
+        Model callables serve both fp-master and frozen params. FFNs whose
+        activation's sign is an exact integer-threshold of the dot
+        (sq_relu) additionally get the threshold folded in at freeze time,
+        so the whole MLP block serves bit-resident (fused epilogue, packed
+        bitplanes between up- and down-projection).
         """
         if self.cfg.quant == "none":
             raise ValueError(f"{self.cfg.name}: quant='none' has no binary "
                              "weights to freeze")
-        return freeze_params(params)
+        frozen = freeze_params(params)
+        if self.cfg.mlp == "sq_relu":
+            frozen = attach_ffn_act_thresholds(frozen, "sq_relu")
+        return frozen
 
 
 def _guard_trainable(params, fn, *args, **kw):

@@ -9,7 +9,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.layers import QuantMode, qmatmul
+from repro.core.layers import (
+    QuantMode, packed_qmatmul, packed_qmatmul_fused, qmatmul, shared_pack,
+)
+from repro.core.packed import PackedWeight
 from repro.launch.shardctx import hint_ffn_hidden
 
 Array = jax.Array
@@ -68,11 +71,34 @@ def ffn(params: dict, x: Array, kind: str, mode: QuantMode, *,
 
     swiglu/geglu params: {w_gate (D,F), w_up (D,F), w_down (F,D)}
     sq_relu/gelu params: {w_up (D,F), w_down (F,D)}
+
+    Frozen binary inference goes bit-resident where exact: sq_relu chains
+    w_up -> w_down entirely in the bit domain (the fused epilogue folds
+    binarize(relu(z)^2) — a constant +1 bit, exactly the unfused
+    semantics — so the hidden activation never leaves the wire format);
+    GLU kinds sign-pack x once and feed the packed words to both gate and
+    up projections. (gelu's fp32 tanh approximation saturates to -0.0 for
+    large-negative z, so its sign is NOT a pure threshold of the integer
+    dot — it stays on the unfused path.)
     """
     keys = jax.random.split(key, 3) if key is not None else (None,) * 3
+    w_up = params["w_up"]
+    if (kind == "sq_relu" and not train and isinstance(w_up, PackedWeight)
+            and w_up.fold == "act:sq_relu"
+            and mode in (QuantMode.BBP, QuantMode.BBP_DET)):
+        # NOTE the fold is a constant threshold: binarize(relu(z)^2) is +1
+        # for every z, so the hidden bitplane is all-ones and the block
+        # contributes an input-independent residual (a pre-existing
+        # artifact of BBP x sq_relu, preserved bit-exactly). A freeze-time
+        # constant could skip both GEMMs entirely; kept as the live fused
+        # chain so real models exercise the packed-I/O kernel path.
+        h = packed_qmatmul_fused(x, w_up, mode)        # PackedActivation
+        return packed_qmatmul(h, params["w_down"], mode)
     if kind in ("swiglu", "geglu"):
-        g = qmatmul(x, params["w_gate"], mode, train=train, key=keys[0])
-        u = qmatmul(x, params["w_up"], mode, train=train, key=keys[1])
+        xs = shared_pack(x, (params["w_gate"], w_up), mode,
+                         train=train)                  # one pack, two GEMMs
+        g = qmatmul(xs, params["w_gate"], mode, train=train, key=keys[0])
+        u = qmatmul(xs, w_up, mode, train=train, key=keys[1])
         act = jax.nn.silu(g) if kind == "swiglu" else jax.nn.gelu(g)
         h = act * u
     elif kind == "sq_relu":

@@ -23,8 +23,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.binarize import binary_act, binarize, clip_weights
-from repro.core.layers import QuantMode, qmatmul
-from repro.core.packed import PackedWeight
+from repro.core.layers import (
+    QuantMode, packed_qmatmul, packed_qmatmul_fused, qmatmul,
+)
+from repro.core.packed import (
+    PackedWeight, fold_bias_sign_threshold, fold_bn_sign_threshold,
+    freeze_params,
+)
 from repro.core.shift_bn import (
     BNParams, BNState, batch_norm, init_bn, shift_batch_norm,
 )
@@ -51,6 +56,52 @@ def init_mlp(key: Array, in_dim: int = 784, hidden: int = 1024,
     return {"layers": layers}
 
 
+def freeze_mlp(params: dict) -> dict:
+    """Freeze the paper MLP for bit-resident serving.
+
+    Weights pack to the wire format (freeze_params); each hidden layer
+    1..n-2 additionally folds its epilogue — (dot + b) * AP2-shift then
+    sign — into an integer threshold (dot >= ceil(-b)), so at inference
+    the hidden chain exchanges packed bitplanes only. The input layer
+    (real-valued pixels, BC) and the L2-SVM output stay dense.
+    """
+    frozen = freeze_params(params)
+    layers = frozen["layers"]
+    for i in range(1, len(layers) - 1):
+        t, f = fold_bias_sign_threshold(params["layers"][i]["b"])
+        layers[i]["w"] = layers[i]["w"].with_threshold(t, f, "bias")
+    return frozen
+
+
+def _mlp_bit_resident_ok(params: dict) -> bool:
+    layers = params["layers"]
+    return (all(isinstance(lp["w"], PackedWeight) for lp in layers)
+            and all(lp["w"].fold == "bias" for lp in layers[1:-1]))
+
+
+def _mlp_forward_bit_resident(params: dict, x: Array) -> Array:
+    """Frozen BBP inference: bits flow between hidden layers, never floats.
+
+    Bit-exact with the master path: hidden bit_i = ((dot + b) * s >= 0)
+    with s an exact positive power of two, i.e. (dot >= ceil(-b)) — the
+    freeze-time threshold.
+    """
+    from repro.core.ap2 import ap2
+    layers = params["layers"]
+    # input layer: real-valued pixels at full precision (paper binarizes
+    # hidden neurons only) — the one dense GEMM of the chain
+    l0 = layers[0]
+    h: Array = jnp.matmul(x, l0["w"].unpack(x.dtype)) + l0["b"]
+    h = h * ap2(1.0 / jnp.sqrt(jnp.float32(l0["w"].shape[0])))
+    for lp in layers[1:-1]:
+        # first fused layer sign-packs the float entry in VMEM; after that
+        # each step consumes the previous step's PackedActivation
+        h = packed_qmatmul_fused(h, lp["w"], QuantMode.BBP)
+    ll = layers[-1]
+    scores = packed_qmatmul(h, ll["w"], QuantMode.BBP) + ll["b"]
+    return scores * ap2(1.0 / jnp.sqrt(jnp.float32(ll["w"].shape[0])))
+
+
 def mlp_forward(params: dict, x: Array, *, mode: str = "bbp",
                 train: bool = False, key: Array | None = None) -> Array:
     """x: (B, 784) in [-1, 1]. Returns L2-SVM scores (B, 10).
@@ -58,6 +109,8 @@ def mlp_forward(params: dict, x: Array, *, mode: str = "bbp",
     mode: 'bbp' (paper), 'bc' (BinaryConnect baseline), 'float'."""
     qm = {"bbp": QuantMode.BBP, "bc": QuantMode.BC,
           "float": QuantMode.NONE}[mode]
+    if qm == QuantMode.BBP and not train and _mlp_bit_resident_ok(params):
+        return _mlp_forward_bit_resident(params, x)
     n = len(params["layers"])
     h = x
     for i, lp in enumerate(params["layers"]):
@@ -123,6 +176,30 @@ def init_cnn(key: Array, in_ch: int = 3, widths=CNN_WIDTHS,
     return params, bn_state
 
 
+def freeze_cnn(params: dict, bn_state: dict, *, bn_kind: str = "shift",
+               eps: float = 1e-4) -> dict:
+    """Freeze the paper CNN for bit-resident serving of its FC tail.
+
+    Conv/FC weights pack to the wire format; fc1/fc2 additionally fold
+    their inference epilogue — (shift-)BN from `bn_state` + clip + sign —
+    into per-channel integer thresholds riding on the PackedWeight. The
+    baked fold makes the frozen tree a self-contained deployment artifact
+    (it survives a packed checkpoint round-trip with the epilogue intact).
+    cnn_forward itself re-folds from the bn params/state it is passed, so
+    the thresholds never go stale against recalibrated statistics.
+    """
+    if bn_kind not in ("shift", "exact"):
+        raise ValueError(bn_kind)
+    frozen = freeze_params(params)
+    for name in ("fc1", "fc2"):
+        bnp, bns = params[name]["bn"], bn_state[name]
+        t, f = fold_bn_sign_threshold(bnp.gamma, bnp.beta, bns.mean, bns.var,
+                                      kind=bn_kind, eps=eps)
+        frozen[name]["w"] = frozen[name]["w"].with_threshold(
+            t, f, f"{bn_kind}-bn")
+    return frozen
+
+
 def cnn_forward(params: dict, bn_state: dict, x: Array, *, mode: str = "bbp",
                 train: bool = False, key: Array | None = None,
                 bn_kind: str = "shift", kernel_path: str = "ref"
@@ -170,6 +247,31 @@ def cnn_forward(params: dict, bn_state: dict, x: Array, *, mode: str = "bbp",
                 h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
 
     h = h.reshape(h.shape[0], -1)
+
+    fc1w, fc2w, outw = params["fc1"]["w"], params["fc2"]["w"], params["out"]["w"]
+    if (qm == QuantMode.BBP and not train
+            and isinstance(outw, PackedWeight)
+            and isinstance(fc1w, PackedWeight)
+            and isinstance(fc2w, PackedWeight)):
+        # bit-resident FC tail: fc1 signs the conv features in VMEM and
+        # emits the packed bits of sign(clip(BN(dot))); fc2 consumes/emits
+        # packed words; only the L2-SVM scores come back dense. The
+        # thresholds are folded HERE from the bn params/state and bn_kind
+        # this call was given (O(fc) work), so recalibrated running
+        # statistics are honored exactly — freeze_cnn's baked fold is the
+        # self-contained deployment artifact, not an override of the
+        # caller's state. Running stats are untouched at inference, so
+        # bn_state passes through.
+        hb = h
+        for name, pw in (("fc1", fc1w), ("fc2", fc2w)):
+            t, f = fold_bn_sign_threshold(
+                params[name]["bn"].gamma, params[name]["bn"].beta,
+                bn_state[name].mean, bn_state[name].var, kind=bn_kind)
+            hb = packed_qmatmul_fused(hb, pw, qm, thresh=t, flip=f)
+            new_bn[name] = bn_state[name]
+        scores = packed_qmatmul(hb, outw, qm) + params["out"]["b"]
+        return scores, new_bn
+
     for j, name in enumerate(("fc1", "fc2")):
         lp = params[name]
         kk = jax.random.fold_in(key, 100 + j) if key is not None else None

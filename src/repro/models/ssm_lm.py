@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.layers import QuantMode, qmatmul
+from repro.core.layers import QuantMode, qmatmul, shared_pack
 from repro.models.attention import decode_attention, flash_attention
 from repro.launch.shardctx import (hint_attn_q, hint_ffn_hidden, hint_gathered, hint_residual)
 from repro.models.common import ffn, ffn_param_shapes, rms_norm, rope
@@ -169,9 +169,11 @@ def _rg_attn_mix(lp: dict, x: Array, cfg: ModelConfig, mode: QuantMode, *,
     keys = jax.random.split(key, 4) if key is not None else (None,) * 4
     b, s, _ = xn.shape
     ap = lp["mix"]["attn"]
-    q = qmatmul(xn, ap["wq"], mode, train=train, key=keys[0])
-    k = qmatmul(xn, ap["wk"], mode, train=train, key=keys[1])
-    v = qmatmul(xn, ap["wv"], mode, train=train, key=keys[2])
+    # frozen binary serving: one sign-pack of the normed residual feeds Q/K/V
+    xs = shared_pack(xn, (ap["wq"], ap["wk"], ap["wv"]), mode, train=train)
+    q = qmatmul(xs, ap["wq"], mode, train=train, key=keys[0])
+    k = qmatmul(xs, ap["wk"], mode, train=train, key=keys[1])
+    v = qmatmul(xs, ap["wv"], mode, train=train, key=keys[2])
     q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
     k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
     v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
@@ -345,9 +347,10 @@ def rg_decode(params: dict, cfg: ModelConfig, token: Array, cache: dict,
         ap = gp["attn"]["mix"]["attn"]
         xn = rms_norm(h, gp["attn"]["mix"]["ln1"]["scale"])
         b = h.shape[0]
-        q = qmatmul(xn, ap["wq"], mode).reshape(b, 1, cfg.n_heads, cfg.head_dim)
-        k = qmatmul(xn, ap["wk"], mode).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
-        v = qmatmul(xn, ap["wv"], mode).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+        xs = shared_pack(xn, (ap["wq"], ap["wk"], ap["wv"]), mode)
+        q = qmatmul(xs, ap["wq"], mode).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+        k = qmatmul(xs, ap["wk"], mode).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+        v = qmatmul(xs, ap["wv"], mode).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
         positions = pos[:, None]                               # (B, 1)
         q = rope(q, positions, cfg.rope_theta)
         k = rope(k, positions, cfg.rope_theta)

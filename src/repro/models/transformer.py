@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.layers import QuantMode, qmatmul
+from repro.core.layers import QuantMode, qmatmul, shared_pack
 from repro.models.attention import decode_attention, flash_attention
 from repro.launch.shardctx import (hint_attn_q, hint_ffn_hidden, hint_gathered, hint_residual)
 from repro.models.common import (
@@ -131,9 +131,13 @@ def _norm(p: dict, x: Array, cfg: ModelConfig) -> Array:
 def _qkv(p: dict, xn: Array, cfg: ModelConfig, mode: QuantMode, train, key):
     keys = jax.random.split(key, 3) if key is not None else (None,) * 3
     b, s, _ = xn.shape
-    q = qmatmul(xn, p["wq"], mode, train=train, key=keys[0])
-    k = qmatmul(xn, p["wk"], mode, train=train, key=keys[1])
-    v = qmatmul(xn, p["wv"], mode, train=train, key=keys[2])
+    # frozen binary serving: sign-pack the normed residual once; Q, K and V
+    # all consume the same 1-bit wire words (3x less activation read traffic
+    # and no per-projection re-pack)
+    xs = shared_pack(xn, (p["wq"], p["wk"], p["wv"]), mode, train=train)
+    q = qmatmul(xs, p["wq"], mode, train=train, key=keys[0])
+    k = qmatmul(xs, p["wk"], mode, train=train, key=keys[1])
+    v = qmatmul(xs, p["wv"], mode, train=train, key=keys[2])
     if cfg.qkv_bias:
         q = q + p["bq"].astype(q.dtype)
         k = k + p["bk"].astype(k.dtype)
@@ -173,8 +177,10 @@ def cross_attn(p: dict, x: Array, img: Array, cfg: ModelConfig,
     b, s, _ = xn.shape
     ni = img.shape[1]
     q = qmatmul(xn, p["attn"]["wq"], mode, train=train, key=keys[0])
-    k = qmatmul(img, p["attn"]["wk"], mode, train=train, key=keys[1])
-    v = qmatmul(img, p["attn"]["wv"], mode, train=train, key=keys[2])
+    imgs = shared_pack(img, (p["attn"]["wk"], p["attn"]["wv"]), mode,
+                       train=train)        # image tokens pack once for K+V
+    k = qmatmul(imgs, p["attn"]["wk"], mode, train=train, key=keys[1])
+    v = qmatmul(imgs, p["attn"]["wv"], mode, train=train, key=keys[2])
     q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
     k = k.reshape(b, ni, cfg.n_kv_heads, cfg.head_dim)
     v = v.reshape(b, ni, cfg.n_kv_heads, cfg.head_dim)
@@ -352,10 +358,12 @@ def transformer_prefill(params: dict, cfg: ModelConfig, tokens: Array, *,
         img = img_emb.astype(h.dtype)
 
         def group_body(h, gp):
-            # cache cross KV
+            # cache cross KV (frozen serving: img sign-packs once for K+V)
             ni = img.shape[1]
-            xk = qmatmul(img, gp["cross"]["attn"]["wk"], mode)
-            xv = qmatmul(img, gp["cross"]["attn"]["wv"], mode)
+            imgs = shared_pack(img, (gp["cross"]["attn"]["wk"],
+                                     gp["cross"]["attn"]["wv"]), mode)
+            xk = qmatmul(imgs, gp["cross"]["attn"]["wk"], mode)
+            xv = qmatmul(imgs, gp["cross"]["attn"]["wv"], mode)
             xk = xk.reshape(b, ni, cfg.n_kv_heads, cfg.head_dim)
             xv = xv.reshape(b, ni, cfg.n_kv_heads, cfg.head_dim)
             h = cross_attn(gp["cross"], h, img, cfg, mode, train=False, key=None)

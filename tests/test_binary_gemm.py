@@ -13,6 +13,8 @@ from repro.kernels import (
 )
 from repro.kernels import ref
 
+pytestmark = pytest.mark.kernels
+
 SHAPES = [
     (8, 32, 16),       # tiny, no padding
     (17, 100, 33),     # all dims ragged

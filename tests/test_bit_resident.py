@@ -1,0 +1,248 @@
+"""Bit-resident forward pass: the fused BN+sign+repack epilogue
+(`binary_gemm_vpu_packed_io`) must be bit-identical to the unfused oracle
+— packed GEMM -> float (shift-)BN -> sign -> pack — everywhere it is
+adopted, across odd K/N (pad-bit edges) and decode-shaped batches."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bitpack import pack_bits, packed_width
+from repro.core.layers import QuantMode
+from repro.core.packed import (
+    PackedActivation, PackedWeight, fold_bias_sign_threshold,
+    fold_bn_sign_threshold, freeze_params,
+)
+from repro.core.shift_bn import BNParams, BNState, batch_norm, shift_batch_norm
+from repro.kernels import ref
+from repro.kernels.binary_gemm import binary_gemm_vpu_packed_io
+from repro.kernels.ops import packed_matmul, packed_matmul_fused
+
+
+def _rand_case(seed, m, k, n):
+    key = jax.random.PRNGKey(seed)
+    kx, kw, kt, kf = jax.random.split(key, 4)
+    x = jax.random.normal(kx, (m, k))
+    w = jax.random.normal(kw, (k, n))
+    thresh = jax.random.randint(kt, (n,), -k, k + 1, jnp.int32)
+    flip = jax.random.bernoulli(kf, 0.5, (n,)).astype(jnp.int32)
+    return x, pack_bits(x), pack_bits(w.T), thresh, flip
+
+
+# ---------------------------------------------------------------------------
+# Kernel level (interpret mode): fused epilogue vs the ref oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.kernels
+@pytest.mark.parametrize("m,k,n", [
+    (8, 32, 64),       # word-aligned
+    (9, 100, 48),      # K not a multiple of 32
+    (17, 64, 10),      # N < one word: output pad bits exercised
+    (3, 37, 33),       # both ragged
+    (130, 257, 129),   # multi-block grid, everything odd
+])
+@pytest.mark.parametrize("packed_lhs", [True, False])
+def test_fused_epilogue_matches_oracle(m, k, n, packed_lhs):
+    x, a_p, b_p, thresh, flip = _rand_case(m * 7 + k + n, m, k, n)
+    want = np.asarray(ref.binary_matmul_fused_ref(a_p, b_p, thresh, flip, k))
+    lhs = a_p if packed_lhs else x
+    got = np.asarray(binary_gemm_vpu_packed_io(lhs, b_p, thresh, flip, k))
+    assert got.shape == (m, packed_width(n))
+    np.testing.assert_array_equal(want, got)
+
+
+@pytest.mark.kernels
+def test_fused_output_pad_bits_are_plus_one():
+    """Pad bits of the emitted word must be 1 (+1): that is the wire-format
+    convention the NEXT layer's weight pad bits cancel against."""
+    _, a_p, b_p, thresh, flip = _rand_case(5, 6, 40, 10)
+    out = np.asarray(binary_gemm_vpu_packed_io(a_p, b_p, thresh, flip, 40))
+    pad = out >> 10                                  # bits 10..31 of the word
+    assert (pad == (1 << 22) - 1).all()
+
+
+@pytest.mark.kernels
+def test_fused_chain_consumes_own_output():
+    """Layer i+1 (packed lhs) over layer i's emitted bitplane == the dense
+    recomputation from the thresholded bits."""
+    m, k, n1, n2 = 6, 50, 33, 20
+    x, a_p, b1, t1, f1 = _rand_case(11, m, k, n1)
+    _, _, b2, t2, f2 = _rand_case(12, m, n1, n2)
+    w1 = PackedWeight(b1, k).with_threshold(t1, f1, "test")
+    w2 = PackedWeight(b2, n1).with_threshold(t2, f2, "test")
+
+    hb = packed_matmul_fused(x, w1)
+    assert isinstance(hb, PackedActivation) and hb.k == n1
+    got = np.asarray(packed_matmul(hb, w2))
+
+    ints1 = np.asarray(packed_matmul(x, w1))
+    bits1 = (ints1 >= np.asarray(t1)) ^ (np.asarray(f1) != 0)
+    want = np.asarray(ref.binary_matmul_packed_ref(
+        pack_bits(jnp.asarray(bits1 * 2.0 - 1.0)), b2, n1))
+    np.testing.assert_array_equal(want, got)
+
+
+@pytest.mark.kernels
+def test_decode_shaped_small_bm_blocks():
+    """M = slots = 8 (decode batch) and explicit small (bm, bn) blocks."""
+    m, k, n = 8, 96, 160
+    x, a_p, b_p, thresh, flip = _rand_case(21, m, k, n)
+    want = np.asarray(ref.binary_matmul_fused_ref(a_p, b_p, thresh, flip, k))
+    for lhs in (x, a_p):
+        got = np.asarray(binary_gemm_vpu_packed_io(lhs, b_p, thresh, flip, k))
+        np.testing.assert_array_equal(want, got)
+        got_small = np.asarray(binary_gemm_vpu_packed_io(
+            lhs, b_p, thresh, flip, k, bm=8, bn=32))
+        np.testing.assert_array_equal(want, got_small)
+
+
+@pytest.mark.kernels
+@pytest.mark.parametrize("kind,bn_fn", [("exact", batch_norm),
+                                        ("shift", shift_batch_norm)])
+def test_threshold_folding_matches_bn_sign(kind, bn_fn):
+    """(dot >= t) XOR flip == sign(BN(dot)) for integer dots — negative
+    gamma (flip), zero gamma (constant bit), both BN kinds."""
+    key = jax.random.PRNGKey(3)
+    n = 48
+    gamma = jax.random.normal(key, (n,)).at[0].set(0.0).at[1].set(-0.7)
+    beta = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    mean = jax.random.normal(jax.random.fold_in(key, 2), (n,)) * 3
+    var = jax.random.uniform(jax.random.fold_in(key, 3), (n,),
+                             minval=0.1, maxval=4.0)
+    dots = jax.random.randint(jax.random.fold_in(key, 4), (128, n),
+                              -200, 201).astype(jnp.float32)
+    y, _ = bn_fn(BNParams(gamma, beta), BNState(mean, var, jnp.int32(0)),
+                 dots, train=False)
+    t, f = fold_bn_sign_threshold(gamma, beta, mean, var, kind=kind)
+    got = (np.asarray(dots).astype(np.int64) >= np.asarray(t)) \
+        ^ (np.asarray(f) != 0)
+    np.testing.assert_array_equal(np.asarray(y) >= 0, got)
+
+
+@pytest.mark.kernels
+def test_bias_folding_matches_bias_sign():
+    b = jnp.array([0.0, -1.0, 1.0, 0.3, -0.7, 2.5])
+    t, f = fold_bias_sign_threshold(b)
+    dots = jnp.arange(-4, 5).astype(jnp.float32)[:, None]
+    want = np.asarray(dots + b) >= 0
+    got = (np.asarray(dots).astype(np.int64) >= np.asarray(t)) \
+        ^ (np.asarray(f) != 0)
+    np.testing.assert_array_equal(want, got)
+
+
+# ---------------------------------------------------------------------------
+# Adoption: models serve bit-resident chains bit-identically to masters
+# ---------------------------------------------------------------------------
+def test_mlp_bit_resident_matches_master():
+    from repro.models.paper_nets import freeze_mlp, init_mlp, mlp_forward
+    key = jax.random.PRNGKey(0)
+    mlp = init_mlp(key, in_dim=20, hidden=33, n_hidden=3)
+    x = jax.random.normal(key, (4, 20))
+    frozen = freeze_mlp(mlp)
+    assert frozen["layers"][1]["w"].fold == "bias"
+    np.testing.assert_array_equal(
+        np.asarray(mlp_forward(mlp, x, mode="bbp")),
+        np.asarray(mlp_forward(frozen, x, mode="bbp")))
+
+
+@pytest.mark.parametrize("bn_kind", ["shift", "exact"])
+def test_cnn_fc_chain_bit_resident(bn_kind):
+    from repro.models.paper_nets import cnn_forward, freeze_cnn, init_cnn
+    key = jax.random.PRNGKey(1)
+    cnn, bn = init_cnn(key, widths=(4, 4, 4, 4, 4, 4), fc=48, img=8)
+    xi = jax.random.normal(key, (2, 8, 8, 3))
+    want, _ = cnn_forward(cnn, bn, xi, mode="bbp", bn_kind=bn_kind)
+    frozen = freeze_cnn(cnn, bn, bn_kind=bn_kind)
+    assert frozen["fc1"]["w"].fold == f"{bn_kind}-bn"
+    got, _ = cnn_forward(frozen, bn, xi, mode="bbp", bn_kind=bn_kind)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_cnn_fc_chain_honors_passed_bn_state_and_kind():
+    """The fused FC tail folds its thresholds from the bn params/state and
+    bn_kind of THIS call — stats recalibrated after freeze_cnn (or a
+    different bn_kind) must be honored, never the freeze-time bake."""
+    from repro.models.paper_nets import cnn_forward, freeze_cnn, init_cnn
+    key = jax.random.PRNGKey(2)
+    cnn, bn = init_cnn(key, widths=(4, 4, 4, 4, 4, 4), fc=16, img=8)
+    xi = jax.random.normal(key, (2, 8, 8, 3))
+    frozen = freeze_cnn(cnn, bn, bn_kind="shift")
+    # recalibrate the running stats after freezing
+    bn2 = jax.tree.map(lambda s: s + 0.5 if s.dtype == jnp.float32 else s, bn)
+    for kind in ("shift", "exact"):
+        want, _ = cnn_forward(cnn, bn2, xi, mode="bbp", bn_kind=kind)
+        got, _ = cnn_forward(frozen, bn2, xi, mode="bbp", bn_kind=kind)
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_ffn_sq_relu_serves_bit_resident():
+    """nemotron (sq_relu MLP blocks): model.freeze attaches the act fold and
+    frozen logits/decode stay bit-exact through the fused FFN."""
+    from repro.configs.smoke import smoke_config
+    from repro.models.api import get_model
+    cfg = smoke_config("nemotron-4-15b")
+    assert cfg.mlp == "sq_relu"
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    frozen = model.freeze(params)
+    wup = frozen["blocks"]["ffn"]["w_up"]
+    assert isinstance(wup, PackedWeight) and wup.fold == "act:sq_relu"
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 9), 0, cfg.vocab)
+    a, _ = model.logits(params, tokens, train=False)
+    b, _ = model.logits(frozen, tokens, train=False)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_rg_shared_qkv_pack_decode_bit_exact():
+    """recurrentgemma: the shared Q/K/V sign-pack (one PackedActivation per
+    attention mix) keeps prefill + per-slot decode bit-exact vs masters."""
+    from repro.configs.smoke import smoke_config
+    from repro.models.api import get_model
+    cfg = smoke_config("recurrentgemma-2b")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    frozen = model.freeze(params)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 7), 0, cfg.vocab)
+    la, ca = model.prefill(params, tokens)
+    lb, cb = model.prefill(frozen, tokens)
+    np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    tok = jnp.argmax(la, -1).astype(jnp.int32)
+    pos = jnp.array([7, 7], jnp.int32)
+    for _ in range(2):
+        la, ca = model.decode(params, tok, ca, pos)
+        lb, cb = model.decode(frozen, tok, cb, pos)
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+        tok = jnp.argmax(la, -1).astype(jnp.int32)
+        pos = pos + 1
+
+
+def test_thresholds_survive_checkpoint_roundtrip(tmp_path):
+    """A frozen bit-resident tree (fold + thresh/flip) restores to the same
+    runtime form — the fused path stays available after a reload."""
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.models.paper_nets import freeze_mlp, init_mlp, mlp_forward
+    key = jax.random.PRNGKey(7)
+    mlp = init_mlp(key, in_dim=12, hidden=20, n_hidden=2)
+    frozen = freeze_mlp(mlp)
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    mgr.save(0, frozen)
+    back = mgr.restore(0, frozen)
+    pw = back["layers"][1]["w"]
+    assert isinstance(pw, PackedWeight) and pw.fold == "bias"
+    np.testing.assert_array_equal(np.asarray(frozen["layers"][1]["w"].thresh),
+                                  np.asarray(pw.thresh))
+    x = jax.random.normal(key, (3, 12))
+    np.testing.assert_array_equal(
+        np.asarray(mlp_forward(mlp, x, mode="bbp")),
+        np.asarray(mlp_forward(back, x, mode="bbp")))
+
+
+def test_packed_activation_roundtrip_and_bc_guard():
+    x = jax.random.normal(jax.random.PRNGKey(5), (3, 70))
+    pa = PackedActivation.pack(x)
+    np.testing.assert_array_equal(np.asarray(pa.unpack()),
+                                  np.asarray(ref.sign_pm1(x)))
+    w = freeze_params({"wq": jax.random.normal(jax.random.PRNGKey(6),
+                                               (70, 8))})["wq"]
+    from repro.core.layers import packed_qmatmul
+    with pytest.raises(ValueError, match="full-precision"):
+        packed_qmatmul(pa, w, QuantMode.BC)

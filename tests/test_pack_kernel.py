@@ -7,6 +7,8 @@ import pytest
 from repro.core.bitpack import pack_bits, unpack_bits
 from repro.kernels.pack import pack_bits_kernel
 
+pytestmark = pytest.mark.kernels
+
 
 @pytest.mark.parametrize("m,k", [(8, 32), (17, 100), (256, 4096), (1, 31),
                                  (300, 1000)])
