@@ -133,12 +133,24 @@ def _bench_one(freeze: bool, smoke: bool):
     # higher aggregate tokens/s at any fixed per-row-step cost
     assert work_c < work_s, \
         f"scheduler did not save work: {work_c} vs {work_s} row-ops"
-    return rows
+    extra = {"tok_s_continuous": tps_c, "tok_s_static": tps_s,
+             "row_ops_continuous": int(work_c), "row_ops_static": int(work_s),
+             "work_ratio": work_s / work_c, "useful_tokens": int(useful)}
+    return rows, extra
 
 
 def run(smoke: bool = False) -> list[tuple[str, float, str]]:
-    return _bench_one(freeze=False, smoke=smoke) + \
-        _bench_one(freeze=True, smoke=smoke)
+    rows, extra = [], {}
+    for freeze in (False, True):
+        r, e = _bench_one(freeze=freeze, smoke=smoke)
+        rows += r
+        extra["packed" if freeze else "fp32"] = e
+    try:
+        from benchmarks._record import record
+    except ImportError:          # run as a script: benchmarks/ is sys.path[0]
+        from _record import record
+    record("continuous_serving", rows, smoke=smoke, **extra)
+    return rows
 
 
 if __name__ == "__main__":

@@ -1,0 +1,107 @@
+"""Decode-attention benchmark: bit-resident (packed) KV cache vs float.
+
+Every decode step must stream the whole KV cache for its attention — at
+serving scale that read is what bounds decode latency and what caps the
+slot count at fixed HBM. With `kv_bits=1` the cache holds sign bitplanes
+(uint32 words packed along head_dim) plus one fp32 V scale per (row, kv
+head), and `decode_attention_packed` computes scores as XOR+popcount over
+the packed words, so both the resident cache and the bytes read per step
+shrink ~32x vs an fp32 cache (~16x vs bf16).
+
+Reported `derived` columns: resident KV-cache bytes and bytes read per
+decode step (analytic from shapes — the hardware-independent facts; the
+acceptance bar is packed >= 16x fewer of both), plus measured step
+latency. On CPU the Pallas kernel runs in interpret mode (Python-speed),
+so wall time under-reports the TPU path; the byte ratios are what the
+bench asserts on. The packed kernel is gated bit-exact against the jnp
+oracle before timing. Results append to BENCH_decode_attention.json
+(benchmarks/_record.py).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import numpy as np
+
+
+def _time_us(fn, *args, iters: int) -> float:
+    fn(*args).block_until_ready()                      # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(*, smoke: bool = False) -> list[tuple[str, float, str]]:
+    from repro.core.bitpack import pack_bits, packed_width
+    from repro.kernels import ref
+    from repro.kernels.decode_attention import (
+        decode_attention_packed, v_cache_scale,
+    )
+    from repro.models.attention import decode_attention
+
+    b, hkv, g, hd = 8, 2, 4, 64          # 8 decode slots, GQA 4:1
+    t = 128 if smoke else 512            # cache length
+    iters = 2 if smoke else 5
+    hdw = packed_width(hd)
+    hq = hkv * g
+
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (b, 1, hq, hd))
+    kf = jax.random.normal(ks[1], (b, t, hkv, hd))
+    vf = jax.random.normal(ks[2], (b, t, hkv, hd))
+    kp, vp = pack_bits(kf), pack_bits(vf)
+    v_scale = v_cache_scale(vf)
+    # ragged per-slot lengths: the continuous-batching layout
+    lens = jax.random.randint(ks[3], (b,), t // 4, t + 1)
+
+    # oracle gate before timing: the kernel must be bit-exact vs the ref
+    want = np.asarray(ref.decode_attention_packed_ref(q, kp, vp, v_scale,
+                                                      lens))
+    got = np.asarray(decode_attention_packed(q, kp, vp, v_scale, lens))
+    np.testing.assert_array_equal(want, got)
+
+    # resident cache bytes and bytes read per decode step (the whole cache
+    # is streamed every step; q/out traffic is negligible and identical)
+    bytes_float = 2 * b * t * hkv * hd * 4                # fp32 K + V
+    bytes_packed = 2 * b * t * hkv * hdw * 4 + b * hkv * 4   # words + scale
+    ratio = bytes_float / bytes_packed
+    assert ratio >= 16, \
+        f"packed cache must be >=16x smaller / fewer bytes/step: {ratio}"
+
+    f_float = jax.jit(lambda q, k, v, n: decode_attention(q, k, v, n))
+    f_packed = jax.jit(lambda q, k, v, s, n: decode_attention_packed(
+        q, k, v, s, n))
+    us_f = _time_us(f_float, q, kf, vf, lens, iters=iters)
+    us_p = _time_us(f_packed, q, kp, vp, v_scale, lens, iters=iters)
+
+    shape = f"B={b} T={t} Hkv={hkv} G={g} hd={hd}"
+    rows = [
+        ("decode_attention_float", us_f,
+         f"{bytes_float} B resident & B/step ({shape}, fp32)"),
+        ("decode_attention_packed", us_p,
+         f"{bytes_packed} B resident & B/step ({ratio:.1f}x fewer; "
+         f"bitplanes + per-head V scale)"),
+    ]
+    extra = {"b": b, "t": t, "hkv": hkv, "g": g, "hd": hd,
+             "cache_bytes_float": bytes_float,
+             "cache_bytes_packed": bytes_packed,
+             "bytes_per_step_float": bytes_float,
+             "bytes_per_step_packed": bytes_packed,
+             "bytes_ratio": ratio, "us_float": us_f, "us_packed": us_p}
+    try:
+        from benchmarks._record import record
+    except ImportError:          # run as a script: benchmarks/ is sys.path[0]
+        from _record import record
+    record("decode_attention", rows, smoke=smoke, **extra)
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for name, us, derived in run(smoke="--smoke" in sys.argv):
+        print(f"{name},{us:.1f},{derived}")

@@ -76,6 +76,14 @@ def run() -> list[tuple[str, float, str]]:
                     max_new_tokens=4) for _ in range(2)]
     for a, b in zip(eng_fp.generate(reqs), eng_pk.generate(reqs)):
         assert (a == b).all()
+    try:
+        from benchmarks._record import record
+    except ImportError:          # run as a script: benchmarks/ is sys.path[0]
+        from _record import record
+    record("packed_serving", rows,
+           resident_binary_bytes_fp32=fp["binary"],
+           resident_binary_bytes_packed=pk["binary"],
+           bytes_ratio=1 / ratio, tok_s_fp32=tps_fp, tok_s_packed=tps_pk)
     return rows
 
 

@@ -16,6 +16,8 @@ _record.py).
                              static same-length batches, mixed traffic)
   bit-resident chain      -> bench_bit_resident (fused packed-I/O epilogue
                              vs unfused: HBM bytes + wall time per layer)
+  packed KV decode attn   -> bench_decode_attention (bit-resident KV cache:
+                             resident bytes + bytes/step vs float cache)
   roofline (dry-run)      -> src/repro/roofline/report.py (separate: needs
                              the 512-device dryrun_results.jsonl)
 """
@@ -32,13 +34,19 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 def main() -> None:
     from benchmarks import (
         bench_accuracy, bench_binary_gemm, bench_bit_resident,
-        bench_continuous_serving, bench_convergence, bench_energy,
-        bench_kernel_dedup, bench_packed_serving, bench_saturation,
+        bench_continuous_serving, bench_convergence, bench_decode_attention,
+        bench_energy, bench_kernel_dedup, bench_packed_serving,
+        bench_saturation,
     )
     from benchmarks._record import record
     mods = [bench_energy, bench_binary_gemm, bench_packed_serving,
-            bench_continuous_serving, bench_bit_resident, bench_kernel_dedup,
+            bench_continuous_serving, bench_bit_resident,
+            bench_decode_attention, bench_kernel_dedup,
             bench_accuracy, bench_saturation, bench_convergence]
+    # these record their own trajectory entries (rows + structured extras),
+    # standalone or under run.py — don't double-append
+    self_recording = {bench_bit_resident, bench_decode_attention,
+                      bench_packed_serving, bench_continuous_serving}
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")
     for mod in mods:
@@ -46,7 +54,7 @@ def main() -> None:
             continue
         rows = mod.run()
         name = mod.__name__.rsplit(".", 1)[-1].removeprefix("bench_")
-        if mod is not bench_bit_resident:   # it records its own extras
+        if mod not in self_recording:
             record(name, rows)
         for row_name, us, derived in rows:
             print(f"{row_name},{us:.1f},{derived}")

@@ -63,6 +63,11 @@ class ModelConfig:
     dt_rank: int = 0
     # quantization — the paper's technique on all projections
     quant: str = "bbp_det"    # none | bc | bbp | bbp_det
+    # KV-cache residency: 0 = float cache (activation dtype); 1 = sign bits
+    # packed along head_dim into uint32 bitplanes + a per-head fp V scale,
+    # served by the XNOR+popcount decode-attention kernel (~32x smaller
+    # cache). Serving-only knob — ServingEngine(kv_bits=1) / freeze(kv_bits=1)
+    kv_bits: int = 0
     # numerics
     dtype: str = "bfloat16"
     remat: bool = True

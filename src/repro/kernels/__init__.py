@@ -12,6 +12,7 @@ from repro.kernels.binary_gemm import (
     binary_gemm_vpu, binary_gemm_mxu, binary_gemm_vpu_packed,
     binary_gemm_vpu_packed_io,
 )
+from repro.kernels.decode_attention import decode_attention_packed
 from repro.kernels.selective_scan import selective_scan
 from repro.kernels.pack import pack_bits_kernel
 
@@ -19,6 +20,6 @@ __all__ = [
     "binary_matmul", "binary_matmul_vpu", "binary_matmul_mxu",
     "binary_conv2d", "packed_matmul", "packed_matmul_fused", "packed_conv2d",
     "binary_gemm_vpu", "binary_gemm_mxu", "binary_gemm_vpu_packed",
-    "binary_gemm_vpu_packed_io",
+    "binary_gemm_vpu_packed_io", "decode_attention_packed",
     "selective_scan", "pack_bits_kernel",
 ]

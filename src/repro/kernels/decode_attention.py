@@ -1,0 +1,138 @@
+"""Pallas TPU kernel for decode attention over a bit-resident KV cache.
+
+The serving-path complement of `binary_gemm_vpu_packed_io`: after PRs 1-3
+froze weights and inter-layer activations to sign bits, the float KV cache
+was the last non-bit-resident tensor in the frozen decode path — and decode
+is bound by reading it, the exact 32x activation-memory tax the paper's
+XNOR+popcount formulation exists to remove. With `kv_bits=1` the cache
+stores K and V as wire-format uint32 bitplanes (sign bits packed along
+head_dim, `ceil(hd/32)` words per position, pad bits 1) plus one fp scale
+per (batch row, kv head) for V, and this kernel computes the whole decode
+step on the packed words:
+
+  * scores: the sign-packed query is XOR'd against each packed K row and
+    popcounted on the VPU lanes — `q.k = hd - 2*popcount(xor)` — never
+    unpacking K;
+  * masking: per-slot `(B,)` cache lengths and an optional sliding window
+    are applied in VMEM (a continuous-batching slot batch holds every row
+    at its own offset);
+  * softmax: max/exp/sum in VMEM, fp32;
+  * V accumulation: packed V unpacks to +-1 *in VMEM only* and accumulates
+    under the softmax weights with the same K-2*acc sign trick, scaled by
+    the per-head fp `v_scale`.
+
+Float K/V are never materialized in HBM: HBM traffic per decode step drops
+from `2*B*T*Hkv*hd*itemsize` to `2*B*T*Hkv*ceil(hd/32)*4` bytes (~32x for
+fp32 caches at hd >= 32).
+
+Grid is (B, Hkv): each program owns one (batch row, kv head) and its full
+(T, hdw) K/V panels in VMEM — T-chunked online softmax is not needed at
+serving cache lengths (T*hdw words is ~1/32 the float cache a single fused
+attention row already streamed). GQA query heads for the kv head ride in
+the same block.
+
+Semantics are defined by `repro.kernels.ref.decode_attention_packed_ref`;
+the kernel is asserted bit-exact against it (tests/test_decode_attention_
+packed.py), so the float op sequence here deliberately mirrors the oracle
+op for op.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.bitpack import pack_bits, unpack_bits
+from repro.kernels._compat import CompilerParams as _CompilerParams
+from repro.kernels.ref import NEG_INF
+
+Array = jax.Array
+
+
+def v_cache_scale(v: Array) -> Array:
+    """Per-(row, kv-head) V magnitude for a packed cache: mean |v| over
+    (positions, head_dim) of a (B, S, Hkv, hd) float V. The one fp number
+    per head that rides with the V bitplane (XNOR-net style scaling) —
+    `out = v_scale * sum_t p_t * sign(v_t)` — fixed at prefill. Single
+    definition for every family that packs a cache (transformer KV, hybrid
+    ring buffer), so their wire formats cannot drift."""
+    return jnp.mean(jnp.abs(v.astype(jnp.float32)), axis=(1, 3))
+
+
+def _decode_packed_kernel(len_ref, q_ref, k_ref, v_ref, s_ref, o_ref, *,
+                          hd: int, hdw: int, window: int):
+    """One (batch row, kv head): q_ref (1,1,G,hdw) uint32, k_ref/v_ref
+    (1,1,T,hdw) uint32, len_ref (1,1) int32, s_ref (1,1) f32, o_ref
+    (1,1,G,hd) f32."""
+    qb = q_ref[0, 0]                                           # (G, hdw)
+    kb = k_ref[0, 0]                                           # (T, hdw)
+    t = kb.shape[0]
+
+    def body(w, acc):
+        x = jnp.bitwise_xor(qb[:, w][:, None], kb[:, w][None, :])
+        return acc + jax.lax.population_count(x).astype(jnp.int32)
+
+    acc = jax.lax.fori_loop(0, hdw, body,
+                            jnp.zeros((qb.shape[0], t), jnp.int32))
+    dots = jnp.int32(hd) - 2 * acc                             # sign dot
+    s = dots.astype(jnp.float32) * jnp.float32(1.0 / float(hd) ** 0.5)
+    pos = jax.lax.broadcasted_iota(jnp.int32, (1, t), 1)
+    length = len_ref[0, 0]
+    valid = pos < length
+    if window > 0:
+        valid &= pos >= length - window
+    s = jnp.where(valid, s, NEG_INF)                           # (G, T)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)                                         # masked -> 0.0
+    l = jnp.sum(e, axis=-1, keepdims=True)                     # (G, 1)
+    sgn = unpack_bits(v_ref[0, 0], hd)                         # (T, hd) +-1
+    accv = jnp.sum(e[:, :, None] * sgn[None, :, :], axis=1)    # (G, hd)
+    o_ref[0, 0] = s_ref[0, 0] * (accv / l)
+
+
+def decode_attention_packed(q: Array, k_packed: Array, v_packed: Array,
+                            v_scale: Array, cache_len: Array, *,
+                            window: int = 0,
+                            interpret: bool | None = None) -> Array:
+    """Single-token decode attention against a bit-resident KV cache.
+
+    q: (B, 1, Hq, hd) float (sign-packed here — one pack per step);
+    k_packed, v_packed: (B, T_max, Hkv, ceil(hd/32)) uint32 wire-format sign
+    bitplanes (pad bits 1, so an odd head_dim's tail cancels in the xor);
+    v_scale: (B, Hkv) float per-head V magnitude (fixed at prefill);
+    cache_len: scalar or (B,) valid positions — the new token is already
+    written at cache_len-1. Masks positions >= cache_len and, when
+    window > 0, positions < cache_len - window. Returns (B, 1, Hq, hd) in
+    q.dtype, bit-exact with ref.decode_attention_packed_ref.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    b, t, hkv, hdw = k_packed.shape
+    hd = q.shape[-1]
+    g = q.shape[2] // hkv
+    qb = pack_bits(q.reshape(b, hkv, g, hd))                   # (B,Hkv,G,hdw)
+    kb = k_packed.transpose(0, 2, 1, 3)                        # (B,Hkv,T,hdw)
+    vb = v_packed.transpose(0, 2, 1, 3)
+    lens = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32).reshape(-1),
+                            (b,)).reshape(b, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_decode_packed_kernel, hd=hd, hdw=hdw,
+                          window=window),
+        grid=(b, hkv),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 1, g, hdw), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, t, hdw), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, t, hdw), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, hd), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(lens, qb, kb, vb, v_scale.astype(jnp.float32))
+    return out.reshape(b, 1, hkv * g, hd).astype(q.dtype)

@@ -9,9 +9,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.bitpack import pack_bits, packed_dot
+from repro.core.bitpack import pack_bits, packed_dot, unpack_bits
 
 Array = jax.Array
+NEG_INF = -1e30
 
 
 def sign_pm1(x: Array) -> Array:
@@ -38,6 +39,49 @@ def binary_matmul_fused_ref(a_packed: Array, b_packed: Array, thresh: Array,
     ints = packed_dot(a_packed[:, None, :], b_packed[None, :, :], k)  # (M, N)
     bits = (ints >= thresh[None, :]) != (flip[None, :] != 0)
     return pack_bits(jnp.where(bits, 1.0, -1.0))
+
+
+def decode_attention_packed_ref(q: Array, k_packed: Array, v_packed: Array,
+                                v_scale: Array, cache_len: Array, *,
+                                window: int = 0) -> Array:
+    """Oracle for kernels.decode_attention.decode_attention_packed.
+
+    Defines the quantized decode-attention semantics the Pallas kernel must
+    match bit-exactly: the KV cache holds only sign bits (packed along
+    head_dim, pad bits 1) plus a per-head fp scale for V, so
+
+        score_t = (hd - 2*popcount(xor(q_bits, k_bits_t))) / sqrt(hd)
+        out     = v_scale * softmax(score)_t . sign(v_t)
+
+    q: (B, 1, Hq, hd) float; k_packed/v_packed: (B, T, Hkv, hdw) uint32;
+    v_scale: (B, Hkv) float; cache_len: scalar or (B,) valid positions.
+    Masks positions >= cache_len and (window > 0) outside the window.
+    The float op sequence (mask -> max -> exp -> sum -> weighted +-1 V sum
+    -> scale * acc / l) mirrors the kernel exactly — bit-exactness is the
+    tested contract, not just closeness.
+    """
+    b, t, hkv, hdw = k_packed.shape
+    hd = q.shape[-1]
+    g = q.shape[2] // hkv
+    qb = pack_bits(q.reshape(b, hkv, g, hd))                  # (B,Hkv,G,hdw)
+    kb = k_packed.transpose(0, 2, 1, 3)                       # (B,Hkv,T,hdw)
+    vb = v_packed.transpose(0, 2, 1, 3)
+    dots = packed_dot(qb[:, :, :, None, :], kb[:, :, None, :, :], hd)
+    s = dots.astype(jnp.float32) * jnp.float32(1.0 / float(hd) ** 0.5)
+    pos = jnp.arange(t, dtype=jnp.int32)[None, :]             # (1, T)
+    length = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32).reshape(-1),
+                              (b,)).reshape(b, 1)
+    valid = pos < length
+    if window > 0:
+        valid &= pos >= length - window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)        # (B,Hkv,G,T)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)                                        # masked -> 0.0
+    l = jnp.sum(e, axis=-1, keepdims=True)
+    sgn = unpack_bits(vb, hd)                                 # (B,Hkv,T,hd)
+    acc = jnp.sum(e[..., None] * sgn[:, :, None, :, :], axis=-2)
+    out = v_scale.astype(jnp.float32)[:, :, None, None] * (acc / l)
+    return out.reshape(b, 1, hkv * g, hd).astype(q.dtype)
 
 
 def binary_conv2d_ref(x: Array, w: Array) -> Array:

@@ -30,6 +30,9 @@ def main() -> None:
     ap.add_argument("--freeze", action="store_true",
                     help="freeze binary weights to packed 1-bit form and "
                          "serve from XNOR+popcount")
+    ap.add_argument("--kv-bits", type=int, default=0, choices=(0, 1),
+                    help="1 = bit-resident KV cache: K/V stored as packed "
+                         "sign bitplanes, decode attention via XOR+popcount")
     ap.add_argument("--queue", action="store_true",
                     help="continuous-batching mode: mixed-length requests "
                          "stream through the slot scheduler")
@@ -59,7 +62,8 @@ def main() -> None:
 
     eng = ServingEngine(cfg, params,
                         max_len=args.prompt_len + args.max_new + 1,
-                        freeze=args.freeze, slots=args.slots, seed=args.seed)
+                        freeze=args.freeze, slots=args.slots, seed=args.seed,
+                        kv_bits=args.kv_bits)
     if eng.frozen:
         rb = eng.resident_weight_bytes()
         total = rb["binary"] + rb["other"]
@@ -67,6 +71,12 @@ def main() -> None:
               f"total = {rb['binary']/1e6:.2f} MB binary layers (packed) "
               f"+ {rb['other']/1e6:.2f} MB non-binary (embeddings, norms, "
               f"recurrence dynamics)")
+        cb = eng.resident_cache_bytes()
+        print(f"kv cache / state ({eng.slots} slots x {eng.max_len}): "
+              f"{cb['total']/1e6:.3f} MB resident = {cb['packed']/1e6:.3f} MB "
+              f"packed bitplanes (kv_bits={eng.cfg.kv_bits}) + "
+              f"{cb['float']/1e6:.3f} MB float (fp K/V, V scales, recurrent "
+              f"state)")
     rng = np.random.default_rng(args.seed)
 
     if args.queue:

@@ -19,6 +19,7 @@ import re
 from typing import Any
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 # (regex on path, spec for the *trailing* dims of the leaf)
@@ -135,12 +136,22 @@ def cache_shardings(mesh, cache_sds, family: str,
     def one(path, leaf):
         name = _path_str(path)
         nd = leaf.ndim
+        if name.endswith("scale"):
+            # kv_bits=1 per-head V scales: (..., B, kv) — tiny; shard batch,
+            # replicate the head axis (kv need not divide 'model')
+            spec = [None] * nd
+            spec[-2] = ba
+            return NamedSharding(mesh, P(*spec))
+        packed_kv = leaf.dtype == jnp.uint32
         if family in ("dense", "moe", "audio", "vlm"):
             # (..., B, T, kv, hd): batch at -4; 'model' on head_dim (the kv
-            # head count (1-32) need not divide the model axis, hd does)
+            # head count (1-32) need not divide the model axis, hd does).
+            # kv_bits=1 bitplanes (..., B, T, kv, hd/32) replicate the word
+            # axis — ceil(hd/32) is too small to split.
             spec = [None] * nd
             spec[-4] = ba
-            spec[-1] = "model"
+            if not packed_kv:
+                spec[-1] = "model"
             return NamedSharding(mesh, P(*spec))
         if family == "ssm":
             spec = [None] * nd
@@ -153,9 +164,10 @@ def cache_shardings(mesh, cache_sds, family: str,
             return NamedSharding(mesh, P(*spec))
         if family == "hybrid":
             spec = [None] * nd
-            if "attn" in name:         # (G,B,W,kv,hd)
+            if "attn" in name:         # (G,B,W,kv,hd) [or packed (...,hd/32)]
                 spec[-4] = ba
-                spec[-1] = "model"
+                if not packed_kv:
+                    spec[-1] = "model"
             elif "conv" in name:       # (...,B,K-1,W)
                 spec[-3] = ba
                 spec[-1] = "model"

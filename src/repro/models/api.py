@@ -9,6 +9,13 @@
 `pos` may be a scalar (static same-length batch) or a (B,) vector — one
 write position per batch row, which is what lets a continuous-batching
 scheduler hold requests at different offsets in the same decode batch.
+
+Cache layout is a per-family detail behind `init_cache`: with
+`cfg.kv_bits == 1` the attention families allocate packed sign-bitplane
+K/V (uint32 words along head_dim + per-head fp32 V scales) and
+prefill/decode serve them through the XNOR+popcount decode-attention
+kernel. Every cache leaf — float or packed — carries an ordinary batch
+axis, so `cache_batch_axes` and slot insertion are layout-agnostic.
 """
 from __future__ import annotations
 

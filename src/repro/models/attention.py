@@ -14,6 +14,17 @@ import functools
 import jax
 import jax.numpy as jnp
 
+# bit-resident decode attention (kv_bits=1 serving): XNOR+popcount scores
+# over uint32 K bitplanes, packed V accumulated under the softmax weights.
+# Re-exported here so model code imports every attention flavor from one
+# module (and tests can swap in kernels.ref.decode_attention_packed_ref).
+from repro.kernels.decode_attention import (
+    decode_attention_packed, v_cache_scale,
+)
+
+__all__ = ["attention_ref", "decode_attention", "decode_attention_packed",
+           "flash_attention", "v_cache_scale"]
+
 Array = jax.Array
 NEG_INF = -1e30
 

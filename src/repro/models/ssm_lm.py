@@ -12,8 +12,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.bitpack import pack_bits, packed_width
 from repro.core.layers import QuantMode, qmatmul, shared_pack
-from repro.models.attention import decode_attention, flash_attention
+from repro.models.attention import (
+    decode_attention, decode_attention_packed, flash_attention, v_cache_scale,
+)
 from repro.launch.shardctx import (hint_attn_q, hint_ffn_hidden, hint_gathered, hint_residual)
 from repro.models.common import ffn, ffn_param_shapes, rms_norm, rope
 from repro.models.ssm import (
@@ -250,34 +253,44 @@ def rg_loss(params: dict, cfg: ModelConfig, batch: dict, *,
 
 
 def rg_init_state(cfg: ModelConfig, batch: int) -> dict:
+    """Recurrent states + the local-attention ring buffer. kv_bits=1 packs
+    the ring's K/V to sign bitplanes (uint32 words along head_dim) with a
+    per-(row, kv-head) fp32 V scale — same wire format and decode kernel
+    as the transformer KV cache, just ring-addressed."""
     g, tail = rg_layout(cfg)
     pat = cfg.block_pattern or ("rec", "rec", "attn")
     n_rec = sum(1 for p in pat if p == "rec")
     w = cfg.lru_width or cfg.d_model
     wnd = cfg.local_window
-    return {
+    packed = cfg.kv_bits == 1
+    kvdt = jnp.uint32 if packed else cfg.activation_dtype
+    hd = packed_width(cfg.head_dim) if packed else cfg.head_dim
+    state = {
         "rec_conv": jnp.zeros((g, n_rec, batch, cfg.d_conv - 1, w),
                               cfg.activation_dtype),
         "rec_h": jnp.zeros((g, n_rec, batch, w), jnp.float32),
-        "attn_k": jnp.zeros((g, batch, wnd, cfg.n_kv_heads, cfg.head_dim),
-                            cfg.activation_dtype),
-        "attn_v": jnp.zeros((g, batch, wnd, cfg.n_kv_heads, cfg.head_dim),
-                            cfg.activation_dtype),
+        "attn_k": jnp.zeros((g, batch, wnd, cfg.n_kv_heads, hd), kvdt),
+        "attn_v": jnp.zeros((g, batch, wnd, cfg.n_kv_heads, hd), kvdt),
         "tail_conv": jnp.zeros((tail, batch, cfg.d_conv - 1, w),
                                cfg.activation_dtype),
         "tail_h": jnp.zeros((tail, batch, w), jnp.float32),
     }
+    if packed:
+        state["attn_v_scale"] = jnp.zeros((g, batch, cfg.n_kv_heads),
+                                          jnp.float32)
+    return state
 
 
 def rg_prefill(params: dict, cfg: ModelConfig, tokens: Array
                ) -> tuple[Array, dict]:
     """Full forward; extracts rec states and ring-buffered window KV."""
     mode = QuantMode(cfg.quant)
+    packed = cfg.kv_bits == 1
     b, s = tokens.shape
     wnd = cfg.local_window
     h = params["embed"][tokens].astype(cfg.activation_dtype)
 
-    def ring_pack(k):  # (B,S,kv,hd) -> (B,W,kv,hd) ring at slot t % W
+    def ring_pack(k):  # (B,S,kv,hd|hdw) -> (B,W,kv,hd|hdw) ring at t % W
         w_eff = min(s, wnd)
         last = k[:, s - w_eff:]
         slots = (jnp.arange(s - w_eff, s)) % wnd
@@ -295,11 +308,19 @@ def rg_prefill(params: dict, cfg: ModelConfig, tokens: Array
         h, (k, v) = _rg_attn_mix(gp["attn"], h, cfg, mode, train=False,
                                  key=None, return_kv=True)
         h = _rg_mlp(gp["attn"], h, cfg, mode, train=False, key=None)
-        return h, (rec_cs, rec_hs, ring_pack(k), ring_pack(v))
+        if packed:   # kv_bits=1: ring holds sign bitplanes + per-head scale
+            kv = (ring_pack(pack_bits(k)), ring_pack(pack_bits(v)),
+                  v_cache_scale(v))
+        else:
+            kv = (ring_pack(k), ring_pack(v))
+        return h, (rec_cs, rec_hs) + kv
 
-    h, (rcs, rhs, ks, vs) = jax.lax.scan(group_body, h, params["groups"])
+    h, (rcs, rhs, ks, vs, *vscale) = jax.lax.scan(group_body, h,
+                                                  params["groups"])
 
     cache = {"rec_conv": rcs, "rec_h": rhs, "attn_k": ks, "attn_v": vs}
+    if packed:
+        cache["attn_v_scale"] = vscale[0]
     if "tail" in params:
         def tail_body(h2, rp):
             h2, (cs, hf) = rglru_block(rp["mix"], h2, cfg, mode, train=False,
@@ -325,6 +346,7 @@ def rg_decode(params: dict, cfg: ModelConfig, token: Array, cache: dict,
     and masks from its own length (rows of a continuous-batching slot
     batch sit at different offsets)."""
     mode = QuantMode(cfg.quant)
+    packed = cfg.kv_bits == 1
     wnd = cfg.local_window
     bsz = token.shape[0]
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (bsz,))
@@ -333,7 +355,11 @@ def rg_decode(params: dict, cfg: ModelConfig, token: Array, cache: dict,
     cache_len = jnp.minimum(pos + 1, wnd)                      # (B,)
 
     def group_body(h, xs):
-        gp, rcs, rhs, kc, vc = xs
+        if packed:
+            gp, rcs, rhs, kc, vc, vsc = xs
+        else:
+            gp, rcs, rhs, kc, vc = xs
+            vsc = None
 
         def rec_body(h2, xs2):
             rp, cs, hf = xs2
@@ -355,18 +381,23 @@ def rg_decode(params: dict, cfg: ModelConfig, token: Array, cache: dict,
         q = rope(q, positions, cfg.rope_theta)
         k = rope(k, positions, cfg.rope_theta)
         rows = jnp.arange(b)
-        kc = kc.at[rows, slot].set(k[:, 0].astype(kc.dtype))
-        vc = vc.at[rows, slot].set(v[:, 0].astype(vc.dtype))
-        out = decode_attention(q, kc, vc, cache_len)
+        if packed:   # ring rows are sign bitplanes; scores are popcounts
+            kc = kc.at[rows, slot].set(pack_bits(k[:, 0]))
+            vc = vc.at[rows, slot].set(pack_bits(v[:, 0]))
+            out = decode_attention_packed(q, kc, vc, vsc, cache_len)
+        else:
+            kc = kc.at[rows, slot].set(k[:, 0].astype(kc.dtype))
+            vc = vc.at[rows, slot].set(v[:, 0].astype(vc.dtype))
+            out = decode_attention(q, kc, vc, cache_len)
         out = out.reshape(b, 1, cfg.n_heads * cfg.head_dim)
         h = h + qmatmul(out, ap["wo"], mode)
         h = _rg_mlp(gp["attn"], h, cfg, mode, train=False, key=None)
         return h, (rcs, rhs, kc, vc)
 
-    h, (rcs, rhs, ks, vs) = jax.lax.scan(
-        group_body, h,
-        (params["groups"], cache["rec_conv"], cache["rec_h"],
-         cache["attn_k"], cache["attn_v"]))
+    group_xs = (params["groups"], cache["rec_conv"], cache["rec_h"],
+                cache["attn_k"], cache["attn_v"]) + \
+        ((cache["attn_v_scale"],) if packed else ())
+    h, (rcs, rhs, ks, vs) = jax.lax.scan(group_body, h, group_xs)
     new_cache = dict(cache, rec_conv=rcs, rec_h=rhs, attn_k=ks, attn_v=vs)
 
     if "tail" in params:

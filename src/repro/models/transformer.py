@@ -25,8 +25,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.bitpack import pack_bits, packed_width
 from repro.core.layers import QuantMode, qmatmul, shared_pack
-from repro.models.attention import decode_attention, flash_attention
+from repro.models.attention import (
+    decode_attention, decode_attention_packed, flash_attention, v_cache_scale,
+)
 from repro.launch.shardctx import (hint_attn_q, hint_ffn_hidden, hint_gathered, hint_residual)
 from repro.models.common import (
     ffn, ffn_param_shapes, layer_norm, moe_ffn, moe_param_shapes, rms_norm,
@@ -319,21 +322,37 @@ def transformer_loss(params: dict, cfg: ModelConfig, batch: dict, *,
 # Serving: prefill + decode with KV cache
 # ---------------------------------------------------------------------------
 def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """KV cache skeleton. kv_bits=0: float K/V in the activation dtype.
+    kv_bits=1 (bit-resident serving): K/V are sign bitplanes — uint32 words
+    packed along head_dim (`ceil(hd/32)` per position, the kernel wire
+    format) — plus a per-(row, kv-head) fp32 V scale fixed at prefill.
+    Packed caches are plain uint32 leaves, so `cache_batch_axes` and the
+    scheduler's slot insertion work on them unchanged."""
+    packed = cfg.kv_bits == 1
     dt = cfg.activation_dtype
     kv, hd = cfg.n_kv_heads, cfg.head_dim
+    kvdt = jnp.uint32 if packed else dt
+    w = packed_width(hd) if packed else hd
     if cfg.family == "vlm":
         g = cfg.n_layers // cfg.xattn_group
         p_self = cfg.xattn_group - 1
-        return {
-            "k": jnp.zeros((g, p_self, batch, max_len, kv, hd), dt),
-            "v": jnp.zeros((g, p_self, batch, max_len, kv, hd), dt),
+        cache = {
+            "k": jnp.zeros((g, p_self, batch, max_len, kv, w), kvdt),
+            "v": jnp.zeros((g, p_self, batch, max_len, kv, w), kvdt),
             # cross-attn KV is computed once from image tokens at prefill
-            "xk": jnp.zeros((g, batch, cfg.n_img_tokens, kv, hd), dt),
-            "xv": jnp.zeros((g, batch, cfg.n_img_tokens, kv, hd), dt),
+            "xk": jnp.zeros((g, batch, cfg.n_img_tokens, kv, w), kvdt),
+            "xv": jnp.zeros((g, batch, cfg.n_img_tokens, kv, w), kvdt),
         }
+        if packed:
+            cache["v_scale"] = jnp.zeros((g, p_self, batch, kv), jnp.float32)
+            cache["xv_scale"] = jnp.zeros((g, batch, kv), jnp.float32)
+        return cache
     n = cfg.n_layers
-    return {"k": jnp.zeros((n, batch, max_len, kv, hd), dt),
-            "v": jnp.zeros((n, batch, max_len, kv, hd), dt)}
+    cache = {"k": jnp.zeros((n, batch, max_len, kv, w), kvdt),
+             "v": jnp.zeros((n, batch, max_len, kv, w), kvdt)}
+    if packed:
+        cache["v_scale"] = jnp.zeros((n, batch, kv), jnp.float32)
+    return cache
 
 
 def transformer_prefill(params: dict, cfg: ModelConfig, tokens: Array, *,
@@ -346,13 +365,23 @@ def transformer_prefill(params: dict, cfg: ModelConfig, tokens: Array, *,
     XNOR+popcount serving kernel (quantization done once at load time).
     """
     mode = QuantMode(cfg.quant)
+    packed = cfg.kv_bits == 1
     b, s = tokens.shape
     max_len = max_len or s
     h = _embed(params, cfg, tokens)
     window = cfg.local_window
 
-    def pad_t(x):  # (B,S,kv,hd) -> (B,T,kv,hd)
+    def pad_t(x):  # (B,S,kv,hd|hdw) -> (B,T,kv,hd|hdw)
         return jnp.pad(x, ((0, 0), (0, max_len - s), (0, 0), (0, 0)))
+
+    def emit_kv(k, v):
+        """Cache rows a prefill emits for one layer. kv_bits=1: sign-pack
+        K/V along head_dim into wire-format words (the PR-3 activation
+        sign-pack, here applied to the cache) + the per-head V scale; the
+        T padding rows are masked by cache_len at decode, never read."""
+        if packed:
+            return pad_t(pack_bits(k)), pad_t(pack_bits(v)), v_cache_scale(v)
+        return pad_t(k), pad_t(v)
 
     if cfg.family == "vlm":
         img = img_emb.astype(h.dtype)
@@ -366,6 +395,8 @@ def transformer_prefill(params: dict, cfg: ModelConfig, tokens: Array, *,
             xv = qmatmul(imgs, gp["cross"]["attn"]["wv"], mode)
             xk = xk.reshape(b, ni, cfg.n_kv_heads, cfg.head_dim)
             xv = xv.reshape(b, ni, cfg.n_kv_heads, cfg.head_dim)
+            xkv = (pack_bits(xk), pack_bits(xv), v_cache_scale(xv)) if packed \
+                else (xk, xv)
             h = cross_attn(gp["cross"], h, img, cfg, mode, train=False, key=None)
             h, _ = ffn_sublayer(gp["cross"], h, cfg, mode, train=False, key=None)
 
@@ -373,31 +404,42 @@ def transformer_prefill(params: dict, cfg: ModelConfig, tokens: Array, *,
                 h2, kvp, _ = _self_block(sp, h2, cfg, mode, train=False,
                                          key=None, window=window,
                                          return_kv=True)
-                return h2, (pad_t(kvp[0]), pad_t(kvp[1]))
+                return h2, emit_kv(*kvp)
 
-            h, (ks, vs) = jax.lax.scan(self_body, h, gp["self"])
-            return h, (ks, vs, xk, xv)
+            h, kvs = jax.lax.scan(self_body, h, gp["self"])
+            return h, kvs + xkv
 
-        h, (ks, vs, xks, xvs) = jax.lax.scan(group_body, h, params["groups"])
-        cache = {"k": ks, "v": vs, "xk": xks, "xv": xvs}
+        h, stacked = jax.lax.scan(group_body, h, params["groups"])
+        if packed:
+            ks, vs, vss, xks, xvs, xvss = stacked
+            cache = {"k": ks, "v": vs, "v_scale": vss,
+                     "xk": xks, "xv": xvs, "xv_scale": xvss}
+        else:
+            ks, vs, xks, xvs = stacked
+            cache = {"k": ks, "v": vs, "xk": xks, "xv": xvs}
     else:
         def block_body(h, bp):
             h, kvp, _ = _self_block(bp, h, cfg, mode, train=False, key=None,
                                     window=window, return_kv=True)
-            return h, (pad_t(kvp[0]), pad_t(kvp[1]))
+            return h, emit_kv(*kvp)
 
-        h, (ks, vs) = jax.lax.scan(block_body, h, params["blocks"])
-        cache = {"k": ks, "v": vs}
+        h, stacked = jax.lax.scan(block_body, h, params["blocks"])
+        if packed:
+            cache = dict(zip(("k", "v", "v_scale"), stacked))
+        else:
+            cache = dict(zip(("k", "v"), stacked))
 
     logits = _head(params, cfg, h[:, -1:])[:, 0]
     return logits, cache
 
 
-def _decode_self_block(bp, h, kc, vc, cfg, mode, pos, window):
+def _decode_self_block(bp, h, kc, vc, cfg, mode, pos, window, v_scale=None):
     """One-token self-attn block against cache. h: (B,1,D); pos: (B,) —
     each row writes its KV at its own position and masks from its own
     length (rows of a continuous-batching slot batch sit at different
-    offsets)."""
+    offsets). kv_bits=1: the new K/V row is sign-packed before the write
+    and attention runs on the uint32 bitplanes (XNOR+popcount scores,
+    per-head `v_scale` V accumulation) — float K/V never touch the cache."""
     b = h.shape[0]
     xn = _norm(bp["ln1"], h, cfg)
     q, k_new, v_new = _qkv(bp["attn"], xn, cfg, mode, False, None)
@@ -406,9 +448,15 @@ def _decode_self_block(bp, h, kc, vc, cfg, mode, pos, window):
         q = rope(q, positions, cfg.rope_theta)
         k_new = rope(k_new, positions, cfg.rope_theta)
     rows = jnp.arange(b)
-    kc = kc.at[rows, pos].set(k_new[:, 0].astype(kc.dtype))
-    vc = vc.at[rows, pos].set(v_new[:, 0].astype(vc.dtype))
-    out = decode_attention(q, kc, vc, pos + 1, window=window)
+    if cfg.kv_bits == 1:
+        kc = kc.at[rows, pos].set(pack_bits(k_new[:, 0]))
+        vc = vc.at[rows, pos].set(pack_bits(v_new[:, 0]))
+        out = decode_attention_packed(q, kc, vc, v_scale, pos + 1,
+                                      window=window)
+    else:
+        kc = kc.at[rows, pos].set(k_new[:, 0].astype(kc.dtype))
+        vc = vc.at[rows, pos].set(v_new[:, 0].astype(vc.dtype))
+        out = decode_attention(q, kc, vc, pos + 1, window=window)
     out = out.reshape(b, 1, cfg.n_heads * cfg.head_dim)
     h = h + qmatmul(out, bp["attn"]["wo"], mode)
     h, _ = ffn_sublayer(bp, h, cfg, mode, train=False, key=None)
@@ -422,6 +470,7 @@ def transformer_decode(params: dict, cfg: ModelConfig, token: Array,
     scalar is broadcast — the static same-length batch). Returns
     (logits (B,V), updated cache)."""
     mode = QuantMode(cfg.quant)
+    packed = cfg.kv_bits == 1
     b = token.shape[0]
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     h = params["embed"][token[:, None]].astype(cfg.activation_dtype)
@@ -432,42 +481,51 @@ def transformer_decode(params: dict, cfg: ModelConfig, token: Array,
 
     if cfg.family == "vlm":
         def group_body(h, xs):
-            gp, xk, xv, kcs, vcs = xs
+            if packed:
+                gp, xk, xv, xvs, kcs, vcs, vss = xs
+            else:
+                gp, xk, xv, kcs, vcs = xs
+                xvs = vss = None
             # cross-attn from cached image KV
             xn = _norm(gp["cross"]["ln1"], h, cfg)
             q = qmatmul(xn, gp["cross"]["attn"]["wq"], mode)
             q = q.reshape(h.shape[0], 1, cfg.n_heads, cfg.head_dim)
-            out = decode_attention(q, xk, xv, xk.shape[1])
+            if packed:
+                out = decode_attention_packed(q, xk, xv, xvs, xk.shape[1])
+            else:
+                out = decode_attention(q, xk, xv, xk.shape[1])
             out = out.reshape(h.shape[0], 1, cfg.n_heads * cfg.head_dim)
             gate = jnp.tanh(gp["cross"]["attn"]["gate"]).astype(out.dtype)
             h = h + gate * qmatmul(out, gp["cross"]["attn"]["wo"], mode)
             h, _ = ffn_sublayer(gp["cross"], h, cfg, mode, train=False, key=None)
 
             def self_body(h2, xs2):
-                sp, kc, vc = xs2
+                sp, kc, vc, vs = ((*xs2, None) if not packed else xs2)
                 h2, kc, vc = _decode_self_block(sp, h2, kc, vc, cfg, mode,
-                                                pos, window)
+                                                pos, window, v_scale=vs)
                 return h2, (kc, vc)
 
-            h, (kcs, vcs) = jax.lax.scan(self_body, h,
-                                         (gp["self"], kcs, vcs))
+            self_xs = (gp["self"], kcs, vcs) + ((vss,) if packed else ())
+            h, (kcs, vcs) = jax.lax.scan(self_body, h, self_xs)
             return h, (kcs, vcs)
 
-        h, (ks, vs) = jax.lax.scan(
-            group_body, h,
-            (params["groups"], cache["xk"], cache["xv"], cache["k"],
-             cache["v"]))
-        new_cache = {"k": ks, "v": vs, "xk": cache["xk"], "xv": cache["xv"]}
+        group_xs = (params["groups"], cache["xk"], cache["xv"]) + \
+            ((cache["xv_scale"],) if packed else ()) + \
+            (cache["k"], cache["v"]) + \
+            ((cache["v_scale"],) if packed else ())
+        h, (ks, vs) = jax.lax.scan(group_body, h, group_xs)
+        new_cache = dict(cache, k=ks, v=vs)
     else:
         def block_body(h, xs):
-            bp, kc, vc = xs
+            bp, kc, vc, vs = ((*xs, None) if not packed else xs)
             h, kc, vc = _decode_self_block(bp, h, kc, vc, cfg, mode, pos,
-                                           window)
+                                           window, v_scale=vs)
             return h, (kc, vc)
 
-        h, (ks, vs) = jax.lax.scan(block_body, h,
-                                   (params["blocks"], cache["k"], cache["v"]))
-        new_cache = {"k": ks, "v": vs}
+        block_xs = (params["blocks"], cache["k"], cache["v"]) + \
+            ((cache["v_scale"],) if packed else ())
+        h, (ks, vs) = jax.lax.scan(block_body, h, block_xs)
+        new_cache = dict(cache, k=ks, v=vs)
 
     logits = _head(params, cfg, h)[:, 0]
     return logits, new_cache

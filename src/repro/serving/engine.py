@@ -20,6 +20,15 @@ the packed runtime form: binary weights live as uint32 sign words (~32x
 smaller resident footprint) and every binarized matmul runs against the
 pre-packed operand — the quantize step happens once at load, never per
 decode step.
+
+Pass `kv_bits=1` (construction or `.freeze(kv_bits=1)`) to also make the
+KV cache bit-resident: K/V live as uint32 sign bitplanes packed along
+head_dim (+ a per-head fp V scale) and decode attention runs as
+XOR+popcount over the packed words (`kernels.decode_attention`) — the
+cache shrinks ~32x and with it the bytes every decode step must read,
+which is what bounds decode at serving scale. `resident_cache_bytes()`
+reports the split the same way `resident_weight_bytes()` does for
+weights.
 """
 from __future__ import annotations
 
@@ -40,7 +49,12 @@ __all__ = ["Request", "Scheduler", "ServingEngine"]
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_len: int = 512,
                  mesh=None, freeze: bool = False, slots: int = 4,
-                 seed: int = 0):
+                 seed: int = 0, kv_bits: int | None = None):
+        if kv_bits is not None:
+            if kv_bits not in (0, 1):
+                raise ValueError(f"kv_bits must be 0 (float cache) or 1 "
+                                 f"(packed sign bitplanes), got {kv_bits}")
+            cfg = cfg.scaled(kv_bits=kv_bits)
         self.cfg = cfg
         self.model = get_model(cfg)
         self.params = params
@@ -52,21 +66,27 @@ class ServingEngine:
         self._sched: Scheduler | None = None
         if freeze:
             self.freeze()
-        self._decode = jax.jit(self.model.decode, donate_argnums=(2,))
-        self._prefill = jax.jit(
-            lambda p, t: self.model.prefill(
-                p, t, **({"max_len": max_len}
-                         if cfg.family in ("dense", "moe", "audio", "vlm")
-                         else {})))
+        self._build_step_fns()
         self.stats = {"prefill_tokens": 0, "decode_steps": 0,
                       "prefill_s": 0.0, "decode_s": 0.0}
 
-    def freeze(self) -> "ServingEngine":
+    def _build_step_fns(self) -> None:
+        self._decode = jax.jit(self.model.decode, donate_argnums=(2,))
+        self._prefill = jax.jit(
+            lambda p, t: self.model.prefill(
+                p, t, **({"max_len": self.max_len}
+                         if self.cfg.family in ("dense", "moe", "audio", "vlm")
+                         else {})))
+
+    def freeze(self, kv_bits: int | None = None) -> "ServingEngine":
         """Freeze fp32 masters to packed 1-bit weights, in place.
 
         Load-time quantization: after this, batched decode runs entirely
         on packed weights (XNOR+popcount) and the fp32 masters are gone.
-        Idempotent; returns self for chaining.
+        Pass `kv_bits=1` to additionally switch the KV cache to packed
+        sign bitplanes (the bit-resident decode-attention kernel) — the
+        cache is rebuilt, so like weight freezing it requires an idle
+        scheduler. Idempotent; returns self for chaining.
         """
         if not self.frozen:
             if self._sched is not None and not self._sched.idle:
@@ -76,11 +96,40 @@ class ServingEngine:
             self.params = self.model.freeze(self.params)
             self.frozen = True
             self._sched = None     # rebuild over the frozen params
+        if kv_bits is not None and kv_bits != self.cfg.kv_bits:
+            if kv_bits not in (0, 1):
+                raise ValueError(f"kv_bits must be 0 or 1, got {kv_bits}")
+            if self._sched is not None and not self._sched.idle:
+                raise RuntimeError(
+                    "cannot change kv_bits with requests in flight — drain "
+                    "the scheduler (run()) first")
+            self.cfg = self.cfg.scaled(kv_bits=kv_bits)
+            self.model = get_model(self.cfg)
+            self._sched = None     # cache layout changed: rebuild
+            self._build_step_fns()
         return self
 
     def resident_weight_bytes(self) -> dict:
         """Bytes of weights resident in memory, split binary vs other."""
         return resident_weight_bytes(self.params)
+
+    def resident_cache_bytes(self) -> dict:
+        """Bytes of KV cache / recurrent state resident for this engine's
+        slot allocation (`slots` rows at `max_len`), split `packed` (uint32
+        sign bitplanes, kv_bits=1) vs `float` (fp K/V, V scales, recurrent
+        states). Family-aware by construction — it walks whatever leaves
+        this family's `init_cache` actually allocates. Computed from
+        abstract shapes; nothing is materialized."""
+        cache = jax.eval_shape(
+            lambda: self.model.init_cache(self.slots, self.max_len))
+        out = {"packed": 0, "float": 0}
+        for leaf in jax.tree.leaves(cache):
+            nbytes = int(np.prod(leaf.shape, dtype=np.int64)) * \
+                jnp.dtype(leaf.dtype).itemsize
+            kind = "packed" if leaf.dtype == jnp.uint32 else "float"
+            out[kind] += nbytes
+        out["total"] = out["packed"] + out["float"]
+        return out
 
     def _next_key(self):
         self._key, sub = jax.random.split(self._key)

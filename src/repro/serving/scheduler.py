@@ -5,8 +5,11 @@ KV-cache / recurrent-state rows are written into a free slot of the
 shared batch cache (`models.api.cache_batch_axes` finds the batch axis of
 every cache leaf structurally, so the same insertion works for dense,
 MoE, audio, VLM, SSM and hybrid families — for the recurrent families
-the row overwrite IS the per-slot state reset). Its first token is
-sampled from the prefill logits on device.
+the row overwrite IS the per-slot state reset). This covers the
+bit-resident cache too: with kv_bits=1 the K/V leaves are plain uint32
+bitplane arrays (plus fp32 per-head V-scale leaves), each with an
+ordinary batch axis, so slot insertion and recycling need no special
+casing. Its first token is sampled from the prefill logits on device.
 
 Decode: one jit'd step advances every slot together — per-slot position
 vector, per-slot temperature, per-slot PRNG key — inside a

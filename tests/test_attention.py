@@ -4,9 +4,20 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.configs.smoke import smoke_config
 from repro.models.attention import (
     attention_ref, decode_attention, flash_attention,
 )
+
+# every family with a decode path; mamba carries no attention geometry and
+# is skipped inside the property test below
+DECODE_ARCHS = ["qwen2-72b", "musicgen-large", "llama-3.2-vision-11b",
+                "falcon-mamba-7b", "recurrentgemma-2b", "dbrx-132b"]
 
 CASES = [
     # b, s, t, hq, hkv, d, causal, window, qoff
@@ -72,6 +83,40 @@ def test_decode_attention_matches_truncated_ref():
     want = attention_ref(q, kc[:, :t_valid], vc[:, :t_valid], causal=True,
                          q_offset=t_valid - 1)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 16))
+def test_decode_attention_ragged_window_property(seed, window):
+    """Property: with per-row (B,) cache lengths AND a sliding window, every
+    row of decode_attention must equal attention_ref run on exactly that
+    row's visible span [max(0, len-window), len) — across every
+    DECODE_ARCHS attention geometry (GQA ratio, MQA, head_dim). The
+    ragged+window interaction is what the continuous-batching slot batch
+    exercises when rows sit at offsets straddling the window."""
+    b, t_max = 3, 24
+    rng = np.random.default_rng(seed * 31 + window)
+    lens = rng.integers(1, t_max + 1, size=b)
+    for arch in DECODE_ARCHS:
+        cfg = smoke_config(arch)
+        if cfg.n_heads == 0:
+            continue   # falcon-mamba: recurrent, no attention geometry
+        hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        key = jax.random.PRNGKey(seed + hq * 1000 + window)
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (b, 1, hq, hd))
+        kc = jax.random.normal(ks[1], (b, t_max, hkv, hd))
+        vc = jax.random.normal(ks[2], (b, t_max, hkv, hd))
+        out = decode_attention(q, kc, vc, jnp.asarray(lens, jnp.int32),
+                               window=window)
+        for j, ln in enumerate(lens):
+            lo = max(0, int(ln) - window)
+            want = attention_ref(q[j:j + 1], kc[j:j + 1, lo:ln],
+                                 vc[j:j + 1, lo:ln], causal=True,
+                                 q_offset=int(ln) - 1 - lo)
+            np.testing.assert_allclose(
+                np.asarray(out[j:j + 1]), np.asarray(want), atol=2e-5,
+                err_msg=f"{arch} row {j} len {ln} window {window}")
 
 
 def test_decode_attention_window():
