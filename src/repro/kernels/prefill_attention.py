@@ -1,0 +1,145 @@
+"""Pallas TPU kernel for chunked-prefill attention over a bit-resident KV
+cache.
+
+The prefill-side complement of `decode_attention_packed`: PR 4 made every
+*decode* step read only uint32 sign bitplanes, but admission still ran a
+whole prompt through float flash attention in one head-of-line-blocking
+call. With chunked prefill (serving.scheduler, prefill_chunk > 0) a prompt
+advances one fixed-shape chunk at a time, and the cross-chunk attention —
+a chunk of float queries against everything already written to the packed
+cache, plus the chunk's own causal triangle — is exactly this kernel:
+
+  * scores: the query chunk is sign-packed once and XOR'd against each
+    packed K row, popcounted on the VPU lanes — `q.k = hd - 2*popcount`
+    — never unpacking K. The chunk's own K rows are written to the cache
+    *before* the call, so intra-chunk (triangle) and cross-chunk scores
+    come out of the same packed panel;
+  * masking: per-row valid length `kv_len` (everything written so far,
+    current chunk included), the causal triangle `t <= q_pos + i`, and an
+    optional sliding window, all fused in VMEM. `causal=False` drops the
+    triangle (VLM cross-attention against packed image KV);
+  * softmax: max/exp/sum in VMEM, fp32;
+  * V accumulation: packed V unpacks to +-1 in VMEM only and accumulates
+    under the softmax weights, scaled by the per-head fp `v_scale`.
+
+Grid is (B, Hkv, S/block_q): each program owns one (batch row, kv head,
+query sub-chunk) and streams the full (T, hdw) K/V panels through VMEM —
+T*hdw words is ~1/32 of the float K/V a flash-attention prefill of the
+same chunk would read. GQA query heads ride in the same block.
+
+Semantics are defined by `repro.kernels.ref.prefill_attention_packed_ref`;
+the kernel is asserted bit-exact against it (tests/test_prefill_attention
+.py), so the float op sequence here deliberately mirrors the oracle op
+for op. With S == 1, q_pos == kv_len - 1 this degenerates to exactly
+`decode_attention_packed` (asserted too).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.bitpack import pack_bits, unpack_bits
+from repro.kernels._compat import CompilerParams as _CompilerParams
+from repro.kernels.ref import NEG_INF
+
+Array = jax.Array
+
+
+def _prefill_packed_kernel(len_ref, qpos_ref, q_ref, k_ref, v_ref, s_ref,
+                           o_ref, *, hd: int, hdw: int, bq: int, window: int,
+                           causal: bool):
+    """One (batch row, kv head, q sub-chunk): q_ref (1,1,bq,G,hdw) uint32,
+    k_ref/v_ref (1,1,T,hdw) uint32, len_ref/qpos_ref (1,1) int32, s_ref
+    (1,1) f32, o_ref (1,1,bq,G,hd) f32."""
+    qb = q_ref[0, 0]                                           # (bq, G, hdw)
+    kb = k_ref[0, 0]                                           # (T, hdw)
+    t = kb.shape[0]
+    g = qb.shape[1]
+
+    def body(w, acc):
+        x = jnp.bitwise_xor(qb[:, :, w][:, :, None], kb[:, w][None, None, :])
+        return acc + jax.lax.population_count(x).astype(jnp.int32)
+
+    acc = jax.lax.fori_loop(0, hdw, body,
+                            jnp.zeros((bq, g, t), jnp.int32))
+    dots = jnp.int32(hd) - 2 * acc                             # sign dot
+    s = dots.astype(jnp.float32) * jnp.float32(1.0 / float(hd) ** 0.5)
+    kpos = jax.lax.broadcasted_iota(jnp.int32, (1, 1, t), 2)
+    qp = qpos_ref[0, 0] + pl.program_id(2) * bq + \
+        jax.lax.broadcasted_iota(jnp.int32, (bq, 1, 1), 0)
+    valid = kpos < len_ref[0, 0]
+    if causal:
+        valid &= kpos <= qp
+    if window > 0:
+        valid &= kpos > qp - window
+    s = jnp.where(valid, s, NEG_INF)                           # (bq, G, T)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)                                         # masked -> 0.0
+    l = jnp.sum(e, axis=-1, keepdims=True)                     # (bq, G, 1)
+    sgn = unpack_bits(v_ref[0, 0], hd)                         # (T, hd) +-1
+    accv = jnp.sum(e[:, :, :, None] * sgn[None, None, :, :], axis=2)
+    o_ref[0, 0] = s_ref[0, 0] * (accv / l)
+
+
+def prefill_attention_packed(q: Array, k_packed: Array, v_packed: Array,
+                             v_scale: Array, kv_len: Array, q_pos: Array, *,
+                             window: int = 0, causal: bool = True,
+                             block_q: int = 8,
+                             interpret: bool | None = None) -> Array:
+    """Chunked-prefill attention against a bit-resident KV cache.
+
+    q: (B, S, Hq, hd) float query chunk (sign-packed here — one pack per
+    chunk); k_packed, v_packed: (B, T_max, Hkv, ceil(hd/32)) uint32
+    wire-format sign bitplanes (pad bits 1); v_scale: (B, Hkv) float
+    per-head V magnitude; kv_len: scalar or (B,) valid cache positions —
+    the chunk's own rows are already written; q_pos: scalar or (B,)
+    global position of q[:, 0]. Masks positions >= kv_len, the causal
+    triangle t > q_pos + i (when `causal`), and, when window > 0,
+    positions <= q_pos + i - window. Query rows are processed in
+    `block_q`-row sub-chunks (S is padded up; pad rows are discarded).
+    Returns (B, S, Hq, hd) in q.dtype, bit-exact with
+    ref.prefill_attention_packed_ref.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    b, t, hkv, hdw = k_packed.shape
+    s = q.shape[1]
+    hd = q.shape[-1]
+    g = q.shape[2] // hkv
+    bq = min(block_q, s)
+    s_pad = -(-s // bq) * bq
+    if s_pad != s:
+        q = jnp.pad(q, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+    # (B, S, Hq, hd) -> (B, Hkv, S, G, hdw): head h = kv_head * G + g
+    qb = pack_bits(q.reshape(b, s_pad, hkv, g, hd).transpose(0, 2, 1, 3, 4))
+    kb = k_packed.transpose(0, 2, 1, 3)                        # (B,Hkv,T,hdw)
+    vb = v_packed.transpose(0, 2, 1, 3)
+    lens = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1),
+                            (b,)).reshape(b, 1)
+    qpos = jnp.broadcast_to(jnp.asarray(q_pos, jnp.int32).reshape(-1),
+                            (b,)).reshape(b, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_prefill_packed_kernel, hd=hd, hdw=hdw, bq=bq,
+                          window=window, causal=causal),
+        grid=(b, hkv, s_pad // bq),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((1, 1, bq, g, hdw), lambda i, j, k: (i, j, k, 0, 0)),
+            pl.BlockSpec((1, 1, t, hdw), lambda i, j, k: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, t, hdw), lambda i, j, k: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, g, hd),
+                               lambda i, j, k: (i, j, k, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, s_pad, g, hd), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel")),
+        interpret=interpret,
+    )(lens, qpos, qb, kb, vb, v_scale.astype(jnp.float32))
+    out = out.transpose(0, 2, 1, 3, 4).reshape(b, s_pad, hkv * g, hd)
+    return out[:, :s].astype(q.dtype)

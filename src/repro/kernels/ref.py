@@ -84,6 +84,84 @@ def decode_attention_packed_ref(q: Array, k_packed: Array, v_packed: Array,
     return out.reshape(b, 1, hkv * g, hd).astype(q.dtype)
 
 
+def packed_masked_attention_ref(q: Array, k_packed: Array, v_packed: Array,
+                                v_scale: Array, valid: Array) -> Array:
+    """Quantized multi-query attention core with an explicit (B, S, T)
+    validity mask — the single definition of the packed-attention op
+    sequence (pack -> popcount dot -> 1/sqrt(hd) -> NEG_INF mask ->
+    max/exp/sum softmax -> +-1 V accumulate under v_scale) that the
+    prefill oracle AND the rg ring-buffer chunk attention both call, so
+    the bit-exactness-critical float ops exist exactly once.
+
+    q: (B, S, Hq, hd) float; k_packed/v_packed: (B, T, Hkv, hdw) uint32;
+    v_scale: (B, Hkv) float. Returns (B, S, Hq, hd) in q.dtype."""
+    b, t, hkv, hdw = k_packed.shape
+    s = q.shape[1]
+    hd = q.shape[-1]
+    g = q.shape[2] // hkv
+    qb = pack_bits(q.reshape(b, s, hkv, g, hd).transpose(0, 2, 1, 3, 4))
+    kb = k_packed.transpose(0, 2, 1, 3)                       # (B,Hkv,T,hdw)
+    vb = v_packed.transpose(0, 2, 1, 3)
+    dots = packed_dot(qb[:, :, :, :, None, :],
+                      kb[:, :, None, None, :, :], hd)         # (B,Hkv,S,G,T)
+    sc = dots.astype(jnp.float32) * jnp.float32(1.0 / float(hd) ** 0.5)
+    sc = jnp.where(valid[:, None, :, None, :], sc, NEG_INF)   # (B,Hkv,S,G,T)
+    m = jnp.max(sc, axis=-1, keepdims=True)
+    e = jnp.exp(sc - m)                                       # masked -> 0.0
+    l = jnp.sum(e, axis=-1, keepdims=True)
+    sgn = unpack_bits(vb, hd)                                 # (B,Hkv,T,hd)
+    acc = jnp.sum(e[..., None] * sgn[:, :, None, None, :, :], axis=-2)
+    out = v_scale.astype(jnp.float32)[:, :, None, None, None] * (acc / l)
+    return out.transpose(0, 2, 1, 3, 4).reshape(b, s, hkv * g, hd
+                                                ).astype(q.dtype)
+
+
+def chunk_valid_mask(b: int, s: int, t: int, kv_len: Array, q_pos: Array,
+                     window: int, causal: bool) -> Array:
+    """(B, S, T) validity mask for a prefill chunk at global positions
+    q_pos..q_pos+S-1 against a T-row cache with kv_len valid rows:
+    t < kv_len [& t <= q_pos+i] [& t > q_pos+i-window]."""
+    kpos = jnp.arange(t, dtype=jnp.int32)[None, None, :]      # (1, 1, T)
+    length = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1),
+                              (b,)).reshape(b, 1, 1)
+    qp = jnp.broadcast_to(jnp.asarray(q_pos, jnp.int32).reshape(-1),
+                          (b,)).reshape(b, 1, 1) + \
+        jnp.arange(s, dtype=jnp.int32)[None, :, None]         # (B, S, 1)
+    valid = jnp.broadcast_to(kpos < length, (b, s, t))
+    if causal:
+        valid &= kpos <= qp
+    if window > 0:
+        valid &= kpos > qp - window
+    return valid
+
+
+def prefill_attention_packed_ref(q: Array, k_packed: Array, v_packed: Array,
+                                 v_scale: Array, kv_len: Array,
+                                 q_pos: Array, *, window: int = 0,
+                                 causal: bool = True) -> Array:
+    """Oracle for kernels.prefill_attention.prefill_attention_packed.
+
+    Chunked-prefill generalization of `decode_attention_packed_ref`: S
+    float queries at global positions q_pos..q_pos+S-1 score against the
+    packed cache (their own rows already written), with the causal
+    triangle and optional sliding window fused into the mask:
+
+        score_{i,t} = (hd - 2*popcount(xor(q_bits_i, k_bits_t))) / sqrt(hd)
+        valid_{i,t} = t < kv_len  [& t <= q_pos+i]  [& t > q_pos+i-window]
+        out_i       = v_scale * softmax(score_i)_t . sign(v_t)
+
+    q: (B, S, Hq, hd) float; k_packed/v_packed: (B, T, Hkv, hdw) uint32;
+    v_scale: (B, Hkv) float; kv_len, q_pos: scalar or (B,). With S == 1
+    and q_pos == kv_len - 1 this is exactly decode_attention_packed_ref.
+    The float op sequence (packed_masked_attention_ref) mirrors the
+    kernel exactly — bit-exactness is the tested contract, not just
+    closeness.
+    """
+    b, t = k_packed.shape[0], k_packed.shape[1]
+    valid = chunk_valid_mask(b, q.shape[1], t, kv_len, q_pos, window, causal)
+    return packed_masked_attention_ref(q, k_packed, v_packed, v_scale, valid)
+
+
 def binary_conv2d_ref(x: Array, w: Array) -> Array:
     """Oracle for ops.binary_conv2d: conv(sign(x), sign(w)) with SAME-size
     output and +1-valued border padding (binarized padding convention —

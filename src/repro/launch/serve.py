@@ -36,6 +36,11 @@ def main() -> None:
     ap.add_argument("--queue", action="store_true",
                     help="continuous-batching mode: mixed-length requests "
                          "stream through the slot scheduler")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked admission: prompts advance through the "
+                         "slot cache in fixed-shape chunks of this many "
+                         "tokens, interleaved with decode bursts (0 = "
+                         "whole-prompt admission)")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="requests/second Poisson arrivals in --queue mode "
                          "(0 = submit everything upfront)")
@@ -63,7 +68,8 @@ def main() -> None:
     eng = ServingEngine(cfg, params,
                         max_len=args.prompt_len + args.max_new + 1,
                         freeze=args.freeze, slots=args.slots, seed=args.seed,
-                        kv_bits=args.kv_bits)
+                        kv_bits=args.kv_bits,
+                        prefill_chunk=args.prefill_chunk or None)
     if eng.frozen:
         rb = eng.resident_weight_bytes()
         total = rb["binary"] + rb["other"]
@@ -113,7 +119,7 @@ def _serve_queue(eng, cfg, rng, args) -> None:
 
     t0 = time.time()
     pending = list(zip(arrive_at, reqs))
-    lats = []
+    lats, ttfts, itls = [], [], []
     while pending or not sched.idle:
         now = time.time() - t0
         while pending and pending[0][0] <= now:
@@ -128,16 +134,30 @@ def _serve_queue(eng, cfg, rng, args) -> None:
         # admittable for requests arriving mid-flight
         for c in sched.poll(drain=not pending):
             lats.append(c.latency)
+            ttfts.append(c.ttft)
+            itls.extend(c.itl.tolist())
             print(f"t={time.time()-t0:7.3f}s done   rid={c.rid} "
-                  f"tokens={c.tokens.size} latency={c.latency*1e3:.1f}ms")
+                  f"tokens={c.tokens.size} latency={c.latency*1e3:.1f}ms "
+                  f"ttft={c.ttft*1e3:.1f}ms")
     wall = time.time() - t0
     lats = np.asarray(sorted(lats))
+    ttfts = np.asarray(ttfts)
+    # wall times below are honest compute times: the scheduler syncs the
+    # device before every clock read (prefill_s / decode_s / per-token)
+    itl_p99 = f"{np.percentile(itls, 99)*1e3:.1f}ms" if itls else "n/a"
     print(f"served {len(lats)} requests in {wall:.3f}s | "
           f"{sched.stats['tokens_out']/wall:.1f} tok/s | "
-          f"p50 {np.percentile(lats, 50)*1e3:.1f}ms "
+          f"latency p50 {np.percentile(lats, 50)*1e3:.1f}ms "
           f"p99 {np.percentile(lats, 99)*1e3:.1f}ms | "
-          f"decode steps {sched.decode_steps()} "
-          f"bursts {sched.stats['bursts']}")
+          f"ttft p50 {np.percentile(ttfts, 50)*1e3:.1f}ms "
+          f"p99 {np.percentile(ttfts, 99)*1e3:.1f}ms | "
+          f"inter-token p99 {itl_p99}")
+    print(f"decode steps {sched.decode_steps()} "
+          f"bursts {sched.stats['bursts']} | "
+          f"prefill {sched.stats['prefill_s']:.3f}s "
+          f"decode {sched.stats['decode_s']:.3f}s | "
+          f"chunked admission: {sched.prefill_chunk or 'off'} "
+          f"({sched.prefill_shape_count} prefill shapes compiled)")
 
 
 if __name__ == "__main__":

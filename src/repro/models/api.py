@@ -44,6 +44,13 @@ class Model:
     prefill: Callable[..., tuple[Array, Any]]
     decode: Callable[..., tuple[Array, Any]]
     init_cache: Callable[..., Any]
+    # prefill_chunk(params, tokens (1, C), cache, slot, pos, n_valid, **kw)
+    # -> (logits (1, V), cache): advance one slot of the shared slot cache
+    # by one fixed-shape prompt chunk — the chunked-admission primitive
+    # every family provides (transformer KV rows + running V scale land
+    # incrementally; recurrent conv/h states and the rg ring advance per
+    # chunk). Compiles once per chunk shape, never per prompt length.
+    prefill_chunk: Callable[..., tuple[Array, Any]]
 
     def freeze(self, params):
         """Freeze fp32 masters to 1-bit packed weights (inference only).
@@ -87,6 +94,9 @@ def get_model(cfg: ModelConfig) -> Model:
             decode=lambda p, token, cache, pos: T.transformer_decode(
                 p, cfg, token, cache, pos),
             init_cache=lambda batch, max_len: T.init_cache(cfg, batch, max_len),
+            prefill_chunk=lambda p, tokens, cache, slot, pos, n_valid, **kw:
+                T.transformer_prefill_chunk(p, cfg, tokens, cache, slot, pos,
+                                            n_valid, **kw),
         )
     if fam == "ssm":
         return Model(
@@ -101,6 +111,9 @@ def get_model(cfg: ModelConfig) -> Model:
             decode=lambda p, token, cache, pos: ssm_lm.mamba_decode(
                 p, cfg, token, cache, pos),
             init_cache=lambda batch, max_len: ssm_lm.mamba_init_state(cfg, batch),
+            prefill_chunk=lambda p, tokens, cache, slot, pos, n_valid, **kw:
+                ssm_lm.mamba_prefill_chunk(p, cfg, tokens, cache, slot, pos,
+                                           n_valid),
         )
     if fam == "hybrid":
         return Model(
@@ -115,6 +128,9 @@ def get_model(cfg: ModelConfig) -> Model:
             decode=lambda p, token, cache, pos: ssm_lm.rg_decode(
                 p, cfg, token, cache, pos),
             init_cache=lambda batch, max_len: ssm_lm.rg_init_state(cfg, batch),
+            prefill_chunk=lambda p, tokens, cache, slot, pos, n_valid, **kw:
+                ssm_lm.rg_prefill_chunk(p, cfg, tokens, cache, slot, pos,
+                                        n_valid),
         )
     raise ValueError(f"unknown family {fam!r}")
 

@@ -21,9 +21,13 @@ import jax.numpy as jnp
 from repro.kernels.decode_attention import (
     decode_attention_packed, v_cache_scale,
 )
+from repro.kernels.prefill_attention import prefill_attention_packed
+from repro.kernels.ref import chunk_valid_mask
 
-__all__ = ["attention_ref", "decode_attention", "decode_attention_packed",
-           "flash_attention", "v_cache_scale"]
+__all__ = ["attention_ref", "chunk_attention", "decode_attention",
+           "decode_attention_packed", "flash_attention",
+           "masked_chunk_attention", "prefill_attention_packed",
+           "v_cache_scale"]
 
 Array = jax.Array
 NEG_INF = -1e30
@@ -181,6 +185,48 @@ def attention_ref(q: Array, k: Array, v: Array, *, causal: bool = True,
     p = jax.nn.softmax(sc, axis=-1)
     out = jnp.einsum("bhgst,bhtd->bhgsd", p, vf)
     return out.reshape(b, hq, s, d).transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def masked_chunk_attention(q: Array, k_cache: Array, v_cache: Array,
+                           valid: Array) -> Array:
+    """Float multi-query attention core with an explicit (B, S, T)
+    validity mask — shared by `chunk_attention` (positional masks) and
+    the rg ring-buffer chunk attention (position-scrambled keys), so the
+    masked-softmax op sequence exists exactly once.
+
+    q: (B, S, Hq, d); caches: (B, T, Hkv, d). O(S*T) scores — S is a
+    fixed small chunk, so no flash-style streaming is needed and the
+    shape compiles once per chunk size, never per prompt length."""
+    b, t, hkv, d = k_cache.shape
+    s, hq = q.shape[1], q.shape[2]
+    g = hq // hkv
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    qf = q.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(b, hkv, g, s, d)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    sc = jnp.einsum("bhgsd,bthd->bhgst", qf, kf) * scale
+    sc = jnp.where(valid[:, None, None], sc, NEG_INF)          # (B,Hkv,G,S,T)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhgst,bthd->bhgsd", p, vf)
+    return out.reshape(b, hq, s, d).transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def chunk_attention(q: Array, k_cache: Array, v_cache: Array,
+                    kv_len: Array, q_pos: Array, *, window: int = 0,
+                    causal: bool = True) -> Array:
+    """Chunked-prefill attention against a float cache: the S-query
+    generalization of `decode_attention` (and the float-cache twin of
+    `prefill_attention_packed`).
+
+    q: (B, S, Hq, d) query chunk at global positions q_pos..q_pos+S-1;
+    caches: (B, T_max, Hkv, d) with the chunk's own rows already written;
+    kv_len, q_pos: scalar or (B,). Masks positions >= kv_len, the causal
+    triangle t > q_pos+i (when `causal` — cross-attention passes False),
+    and (window > 0) positions <= q_pos+i - window.
+    """
+    b, t = k_cache.shape[0], k_cache.shape[1]
+    valid = chunk_valid_mask(b, q.shape[1], t, kv_len, q_pos, window, causal)
+    return masked_chunk_attention(q, k_cache, v_cache, valid)
 
 
 def decode_attention(q: Array, k_cache: Array, v_cache: Array,

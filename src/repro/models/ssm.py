@@ -196,7 +196,8 @@ def _mamba_ssm_coeffs(bp: dict, x: Array, cfg: ModelConfig,
 
 
 def _mamba_chunk_scan(bp: dict, dt: Array, xi: Array, bmat: Array,
-                      cmat: Array, chunk: int) -> tuple[Array, Array]:
+                      cmat: Array, chunk: int,
+                      h0: Array | None = None) -> tuple[Array, Array]:
     """Selective scan with coefficients built INSIDE the remat'd chunk
     body: only (B, L, di) / (B, L, N) tensors ever hit HBM; the
     (B, Q, di, N) recurrence coefficients exist one chunk at a time.
@@ -242,7 +243,8 @@ def _mamba_chunk_scan(bp: dict, dt: Array, xi: Array, bmat: Array,
                       b_c.swapaxes(0, 1), c_c.swapaxes(0, 1)))
         return h, y.swapaxes(0, 1)
 
-    h0 = jnp.zeros((bsz, di, n), jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((bsz, di, n), jnp.float32)
     h_fin, ys = jax.lax.scan(
         body, h0, (to_chunks(dt), to_chunks(xi), to_chunks(bmat),
                    to_chunks(cmat)))
@@ -276,6 +278,51 @@ def mamba_block(bp: dict, x: Array, cfg: ModelConfig, mode: QuantMode, *,
     if return_state:
         return out, (conv_state, h_fin)
     return out
+
+
+def _conv_state_at(conv_state: Array, x_pre: Array, n_valid: Array,
+                   k: int) -> Array:
+    """Conv history as of the chunk's last REAL token: rows
+    [n_valid - (K-1), n_valid) of concat(state, x_pre) — pad rows beyond
+    `n_valid` never enter the state, so a padded final chunk leaves the
+    recurrence exactly where the unpadded prompt would."""
+    xp = jnp.concatenate([conv_state.astype(x_pre.dtype), x_pre], axis=1)
+    out = jax.lax.dynamic_slice_in_dim(xp, jnp.asarray(n_valid, jnp.int32),
+                                       k - 1, axis=1)
+    return out.astype(conv_state.dtype)
+
+
+def mamba_block_chunk(bp: dict, x: Array, conv_state: Array, h0: Array,
+                      n_valid: Array, cfg: ModelConfig, mode: QuantMode,
+                      chunk: int = 256) -> tuple[Array, Array, Array]:
+    """Mamba block over one prefill chunk from explicit state.
+
+    x: (1, C, D) right-padded chunk; conv_state: (1, K-1, di); h0:
+    (1, di, N); n_valid: traced count of real tokens. Pad positions are
+    masked out of the recurrence (dt -> 0 gives a = 1, bx = 0, so the
+    state passes through them unchanged) and out of the conv history, so
+    chaining chunks reproduces the whole-prompt `mamba_block` recurrence
+    step for step. Returns (y (1, C, D), conv_state', h')."""
+    c = x.shape[1]
+    xn = rms_norm(x, bp["ln"]["scale"])
+    xz = qmatmul(xn, bp["in_proj"], mode)
+    xi_pre, z = jnp.split(xz, 2, axis=-1)
+    xi, _ = causal_conv1d(xi_pre, bp["conv_w"], bp["conv_b"], conv_state)
+    new_conv = _conv_state_at(conv_state, xi_pre, n_valid, cfg.d_conv)
+    xi = jax.nn.silu(xi)
+    dtr = cfg.dt_rank or max(1, cfg.d_model // 16)
+    n = cfg.ssm_state
+    dbc = qmatmul(xi, bp["x_proj"], mode)
+    dt_lr, bmat, cmat = jnp.split(dbc, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("blr,rd->bld", dt_lr.astype(jnp.float32),
+                   bp["dt_w"].astype(jnp.float32)) + bp["dt_b"])
+    dt = dt * (jnp.arange(c) < n_valid)[None, :, None]   # pads: a=1, bx=0
+    y, h_fin = _mamba_chunk_scan(bp, dt, xi, bmat.astype(jnp.float32),
+                                 cmat.astype(jnp.float32), chunk, h0=h0)
+    y = (y + bp["D"] * xi.astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return x + qmatmul(y, bp["out_proj"], mode), new_conv, h_fin
 
 
 def mamba_block_step(bp: dict, x: Array, conv_state: Array, h: Array,
@@ -348,6 +395,29 @@ def rglru_block(bp: dict, x: Array, cfg: ModelConfig, mode: QuantMode, *,
     if return_state:
         return out, (conv_state, h_fin)
     return out
+
+
+def rglru_block_chunk(bp: dict, x: Array, conv_state: Array, h0: Array,
+                      n_valid: Array, cfg: ModelConfig, mode: QuantMode,
+                      chunk: int = 256) -> tuple[Array, Array, Array]:
+    """RG-LRU temporal-mix sublayer over one prefill chunk from explicit
+    state. x: (1, C, D) right-padded; conv_state: (1, K-1, W); h0: (1, W).
+    Pads are masked out of the recurrence (a = 1, b = 0) and the conv
+    history, so chunked prefill chains to the whole-prompt `rglru_block`
+    recurrence. Returns (y (1, C, D), conv_state', h')."""
+    c = x.shape[1]
+    xn = rms_norm(x, bp["ln"]["scale"])
+    xi_pre = qmatmul(xn, bp["w_x"], mode)
+    gate = jax.nn.gelu(qmatmul(xn, bp["w_gate"], mode))
+    xi, _ = causal_conv1d(xi_pre, bp["conv_w"], bp["conv_b"], conv_state)
+    new_conv = _conv_state_at(conv_state, xi_pre, n_valid, cfg.d_conv)
+    a, b = _rglru_coeffs(bp, xi)
+    msk = (jnp.arange(c) < n_valid)[None, :, None]
+    a = jnp.where(msk, a, 1.0)
+    b = b * msk
+    y, h_fin = chunked_diag_scan(a, b, h0, chunk, lambda hc, _: hc)
+    y = y.astype(x.dtype) * gate
+    return x + qmatmul(y, bp["w_out"], mode), new_conv, h_fin
 
 
 def rglru_block_step(bp: dict, x: Array, conv_state: Array, h: Array,

@@ -14,14 +14,17 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.bitpack import pack_bits, packed_width
 from repro.core.layers import QuantMode, qmatmul, shared_pack
+from repro.kernels.ref import packed_masked_attention_ref
 from repro.models.attention import (
-    decode_attention, decode_attention_packed, flash_attention, v_cache_scale,
+    decode_attention, decode_attention_packed, flash_attention,
+    masked_chunk_attention, v_cache_scale,
 )
 from repro.launch.shardctx import (hint_attn_q, hint_ffn_hidden, hint_gathered, hint_residual)
 from repro.models.common import ffn, ffn_param_shapes, rms_norm, rope
 from repro.models.ssm import (
-    causal_conv1d, mamba_block, mamba_block_step, init_mamba_params,
-    rglru_block, rglru_block_step, rglru_block_shapes,
+    causal_conv1d, mamba_block, mamba_block_chunk, mamba_block_step,
+    init_mamba_params, rglru_block, rglru_block_chunk, rglru_block_step,
+    rglru_block_shapes,
 )
 from repro.models.transformer import (
     _init_from_shapes, _self_attn_shapes, _norm_shapes,
@@ -92,15 +95,23 @@ def mamba_prefill(params: dict, cfg: ModelConfig, tokens: Array
 
 def mamba_decode(params: dict, cfg: ModelConfig, token: Array, cache: dict,
                  pos: Array) -> tuple[Array, dict]:
-    """O(1) decode step. `pos` (scalar or (B,)) is accepted for API
-    uniformity but unused: the recurrence is position-free; per-slot
+    """O(1) decode step. The recurrence is position-free, so `pos` (scalar
+    or (B,)) only carries the inactive-row sentinel: rows with pos < 0
+    compute but leave their recurrent state untouched (the scheduler marks
+    freed and mid-chunked-admission slots this way, so interleaved decode
+    bursts cannot corrupt a partially prefilled slot's state). Per-slot
     state reset happens by overwriting the state rows at admission."""
     mode = QuantMode(cfg.quant)
+    bsz = token.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (bsz,))
+    live = (pos >= 0)
     h = params["embed"][token[:, None]].astype(cfg.activation_dtype)
 
     def body(h, xs):
         bp, conv_s, hs = xs
-        h, conv_s, hs = mamba_block_step(bp, h, conv_s, hs, cfg, mode)
+        h, cs_new, hs_new = mamba_block_step(bp, h, conv_s, hs, cfg, mode)
+        conv_s = jnp.where(live[:, None, None], cs_new, conv_s)
+        hs = jnp.where(live[:, None, None], hs_new, hs)
         return h, (conv_s, hs)
 
     h, (conv_states, h_states) = jax.lax.scan(
@@ -109,6 +120,46 @@ def mamba_decode(params: dict, cfg: ModelConfig, token: Array, cache: dict,
     w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = jnp.einsum("bsd,dv->bsv", hn, w.astype(hn.dtype))[:, 0]
     return logits, {"conv": conv_states, "h": h_states}
+
+
+def mamba_prefill_chunk(params: dict, cfg: ModelConfig, tokens: Array,
+                        cache: dict, slot: Array, pos: Array, n_valid: Array
+                        ) -> tuple[Array, dict]:
+    """Advance one slot's prefill by one fixed-shape chunk: the recurrent
+    states in the slot's cache rows advance by `n_valid` real tokens
+    (pads are masked out of the recurrence). tokens: (1, C) right-padded;
+    slot / pos / n_valid: traced int32 scalars. pos == 0 is the first
+    chunk: the slot's (recycled, stale) state rows are zeroed before use.
+    Returns (logits (1, V) at the chunk's last real token, updated cache).
+    """
+    mode = QuantMode(cfg.quant)
+    slot = jnp.asarray(slot, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    h = params["embed"][tokens].astype(cfg.activation_dtype)
+    live = (pos > 0)     # first chunk: start from zero state, not the
+    conv_all = jax.lax.dynamic_slice_in_dim(cache["conv"], slot, 1, axis=1) \
+        * live.astype(cache["conv"].dtype)      # previous occupant's rows
+    h_all = jax.lax.dynamic_slice_in_dim(cache["h"], slot, 1, axis=1) \
+        * live.astype(cache["h"].dtype)
+
+    def body(hh, xs):
+        bp, cs, hs = xs
+        hh, cs, hs = mamba_block_chunk(bp, hh, cs, hs, n_valid, cfg, mode)
+        return hh, (cs, hs)
+
+    hh, (css, hss) = jax.lax.scan(body, h, (params["blocks"], conv_all, h_all))
+    new_cache = {
+        "conv": jax.lax.dynamic_update_slice_in_dim(
+            cache["conv"], css.astype(cache["conv"].dtype), slot, axis=1),
+        "h": jax.lax.dynamic_update_slice_in_dim(
+            cache["h"], hss.astype(cache["h"].dtype), slot, axis=1),
+    }
+    hl = jax.lax.dynamic_slice_in_dim(hh, n_valid - 1, 1, axis=1)
+    hn = rms_norm(hl, params["final_norm"]["scale"])
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", hn, w.astype(hn.dtype))[:, 0]
+    return logits, new_cache
 
 
 # ===========================================================================
@@ -344,15 +395,19 @@ def rg_decode(params: dict, cfg: ModelConfig, token: Array, cache: dict,
               pos: Array) -> tuple[Array, dict]:
     """pos: scalar or (B,) int32 — each row writes its own ring-buffer slot
     and masks from its own length (rows of a continuous-batching slot
-    batch sit at different offsets)."""
+    batch sit at different offsets). pos[b] < 0 marks row b inactive: it
+    computes but writes neither ring rows nor recurrent state, so decode
+    bursts interleaved with chunked admission cannot corrupt a partially
+    prefilled slot."""
     mode = QuantMode(cfg.quant)
     packed = cfg.kv_bits == 1
     wnd = cfg.local_window
     bsz = token.shape[0]
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (bsz,))
+    live = (pos >= 0)
     h = params["embed"][token[:, None]].astype(cfg.activation_dtype)
-    slot = pos % wnd                                           # (B,)
-    cache_len = jnp.minimum(pos + 1, wnd)                      # (B,)
+    slot = jnp.where(live, pos % wnd, wnd)                     # OOB -> drop
+    cache_len = jnp.where(live, jnp.minimum(pos + 1, wnd), 0)  # (B,)
 
     def group_body(h, xs):
         if packed:
@@ -363,7 +418,10 @@ def rg_decode(params: dict, cfg: ModelConfig, token: Array, cache: dict,
 
         def rec_body(h2, xs2):
             rp, cs, hf = xs2
-            h2, cs, hf = rglru_block_step(rp["mix"], h2, cs, hf, cfg, mode)
+            h2, cs_new, hf_new = rglru_block_step(rp["mix"], h2, cs, hf,
+                                                  cfg, mode)
+            cs = jnp.where(live[:, None, None], cs_new, cs)
+            hf = jnp.where(live[:, None], hf_new, hf)
             h2 = _rg_mlp(rp, h2, cfg, mode, train=False, key=None)
             return h2, (cs, hf)
 
@@ -382,12 +440,12 @@ def rg_decode(params: dict, cfg: ModelConfig, token: Array, cache: dict,
         k = rope(k, positions, cfg.rope_theta)
         rows = jnp.arange(b)
         if packed:   # ring rows are sign bitplanes; scores are popcounts
-            kc = kc.at[rows, slot].set(pack_bits(k[:, 0]))
-            vc = vc.at[rows, slot].set(pack_bits(v[:, 0]))
+            kc = kc.at[rows, slot].set(pack_bits(k[:, 0]), mode="drop")
+            vc = vc.at[rows, slot].set(pack_bits(v[:, 0]), mode="drop")
             out = decode_attention_packed(q, kc, vc, vsc, cache_len)
         else:
-            kc = kc.at[rows, slot].set(k[:, 0].astype(kc.dtype))
-            vc = vc.at[rows, slot].set(v[:, 0].astype(vc.dtype))
+            kc = kc.at[rows, slot].set(k[:, 0].astype(kc.dtype), mode="drop")
+            vc = vc.at[rows, slot].set(v[:, 0].astype(vc.dtype), mode="drop")
             out = decode_attention(q, kc, vc, cache_len)
         out = out.reshape(b, 1, cfg.n_heads * cfg.head_dim)
         h = h + qmatmul(out, ap["wo"], mode)
@@ -403,7 +461,10 @@ def rg_decode(params: dict, cfg: ModelConfig, token: Array, cache: dict,
     if "tail" in params:
         def tail_body(h2, xs2):
             rp, cs, hf = xs2
-            h2, cs, hf = rglru_block_step(rp["mix"], h2, cs, hf, cfg, mode)
+            h2, cs_new, hf_new = rglru_block_step(rp["mix"], h2, cs, hf,
+                                                  cfg, mode)
+            cs = jnp.where(live[:, None, None], cs_new, cs)
+            hf = jnp.where(live[:, None], hf_new, hf)
             h2 = _rg_mlp(rp, h2, cfg, mode, train=False, key=None)
             return h2, (cs, hf)
 
@@ -412,6 +473,153 @@ def rg_decode(params: dict, cfg: ModelConfig, token: Array, cache: dict,
         new_cache["tail_conv"], new_cache["tail_h"] = tcs, ths
 
     hn = rms_norm(h, params["final_norm"]["scale"])
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", hn, w.astype(hn.dtype))[:, 0]
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill (hybrid): rec states + ring buffer advance per chunk
+# ---------------------------------------------------------------------------
+def _rg_attn_chunk(gp: dict, h: Array, kc: Array, vc: Array, vsc, cfg,
+                   mode: QuantMode, pos: Array, n_valid: Array,
+                   positions: Array):
+    """Local-attention layer over one prefill chunk against the slot's
+    ring buffer. Ring slot j holds position t_j = pos-1 - ((pos-1-j) mod
+    wnd) (< pos); the chunk's own keys ride alongside, masked causally and
+    by the window, so C > wnd works. After attention the ring advances by
+    the chunk — 'later wins' resolved as a deterministic per-slot gather
+    (scatter with duplicate indices would be order-undefined)."""
+    packed = cfg.kv_bits == 1
+    wnd = cfg.local_window
+    c = h.shape[1]
+    ap = gp["mix"]["attn"]
+    xn = rms_norm(h, gp["mix"]["ln1"]["scale"])
+    xs = shared_pack(xn, (ap["wq"], ap["wk"], ap["wv"]), mode)
+    q = qmatmul(xs, ap["wq"], mode).reshape(1, c, cfg.n_heads, cfg.head_dim)
+    k = qmatmul(xs, ap["wk"], mode).reshape(1, c, cfg.n_kv_heads, cfg.head_dim)
+    v = qmatmul(xs, ap["wv"], mode).reshape(1, c, cfg.n_kv_heads, cfg.head_dim)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    j = jnp.arange(wnd, dtype=jnp.int32)
+    t_ring = pos - 1 - ((pos - 1 - j) % wnd)                  # (wnd,)
+    kpos = jnp.concatenate([t_ring, positions])               # (wnd + C,)
+    kvalid = jnp.concatenate([(t_ring >= 0) & (pos > 0),
+                              jnp.arange(c) < n_valid])
+    valid = (kvalid[None, :] & (kpos[None, :] <= positions[:, None]) &
+             (kpos[None, :] > positions[:, None] - wnd))[None]  # (1,C,wnd+C)
+
+    if packed:
+        k_rows, v_rows = pack_bits(k[0]), pack_bits(v[0])     # (C, kv, hdw)
+        kb = jnp.concatenate([kc, k_rows[None]], axis=1)
+        vb = jnp.concatenate([vc, v_rows[None]], axis=1)
+        absm = jnp.mean(jnp.abs(v[0].astype(jnp.float32)), axis=-1)
+        msk = (jnp.arange(c) < n_valid)[:, None]
+        vsc = (vsc * pos.astype(jnp.float32)
+               + jnp.sum(absm * msk, axis=0)[None]) / \
+            (pos + n_valid).astype(jnp.float32)
+        # the ring is wnd rows: the jnp quantized core (the same op
+        # sequence the Pallas prefill kernel is asserted bit-exact
+        # against) is plenty; the kernel serves the unbounded-T KV cache
+        out = packed_masked_attention_ref(q, kb, vb, vsc, valid)
+    else:
+        k_rows, v_rows = k[0].astype(kc.dtype), v[0].astype(vc.dtype)
+        kb = jnp.concatenate([kc, k_rows[None]], axis=1)
+        vb = jnp.concatenate([vc, v_rows[None]], axis=1)
+        out = masked_chunk_attention(q, kb, vb, valid)
+    out = out.reshape(1, c, cfg.n_heads * cfg.head_dim)
+    h = h + qmatmul(out, ap["wo"], mode)
+
+    # ring advance: slot j <- latest chunk row i < n_valid with
+    # (pos + i) % wnd == j, if any; else keep the old row
+    i0 = (j - pos) % wnd
+    has = i0 < n_valid
+    istar = jnp.clip(i0 + ((n_valid - 1 - i0) // wnd) * wnd, 0, c - 1)
+    sel = has[None, :, None, None]
+    kc = jnp.where(sel, k_rows[istar][None], kc)
+    vc = jnp.where(sel, v_rows[istar][None], vc)
+    return h, kc, vc, vsc
+
+
+def rg_prefill_chunk(params: dict, cfg: ModelConfig, tokens: Array,
+                     cache: dict, slot: Array, pos: Array, n_valid: Array
+                     ) -> tuple[Array, dict]:
+    """Advance one slot's prefill by one fixed-shape chunk: RG-LRU / conv
+    states advance by `n_valid` real tokens and each group's local-attn
+    ring buffer rotates forward by the chunk. tokens: (1, C) right-padded;
+    slot / pos / n_valid: traced int32 scalars. pos == 0 zeroes the slot's
+    stale recurrent state (ring rows are masked by position, so they need
+    no reset). Returns (logits (1, V) at the last real token, new cache)."""
+    mode = QuantMode(cfg.quant)
+    packed = cfg.kv_bits == 1
+    slot = jnp.asarray(slot, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    c = tokens.shape[1]
+    positions = jnp.arange(c, dtype=jnp.int32) + pos
+    h = params["embed"][tokens].astype(cfg.activation_dtype)
+    live = (pos > 0)
+
+    def dslice(x, ax, reset=False):
+        row = jax.lax.dynamic_slice_in_dim(x, slot, 1, axis=ax)
+        return row * live.astype(x.dtype) if reset else row
+
+    def dput(x, rows, ax):
+        return jax.lax.dynamic_update_slice_in_dim(x, rows.astype(x.dtype),
+                                                   slot, axis=ax)
+
+    group_xs = (params["groups"], dslice(cache["rec_conv"], 2, reset=True),
+                dslice(cache["rec_h"], 2, reset=True),
+                dslice(cache["attn_k"], 1), dslice(cache["attn_v"], 1)) + \
+        ((dslice(cache["attn_v_scale"], 1),) if packed else ())
+
+    def group_body(h, xs):
+        if packed:
+            gp, rcs, rhs, kc, vc, vsc = xs
+        else:
+            gp, rcs, rhs, kc, vc = xs
+            vsc = None
+
+        def rec_body(h2, xs2):
+            rp, cs, hf = xs2
+            h2, cs, hf = rglru_block_chunk(rp["mix"], h2, cs, hf, n_valid,
+                                           cfg, mode)
+            h2 = _rg_mlp(rp, h2, cfg, mode, train=False, key=None)
+            return h2, (cs, hf)
+
+        h, (rcs, rhs) = jax.lax.scan(rec_body, h, (gp["rec"], rcs, rhs))
+        h, kc, vc, vsc = _rg_attn_chunk(gp["attn"], h, kc, vc, vsc, cfg,
+                                        mode, pos, n_valid, positions)
+        h = _rg_mlp(gp["attn"], h, cfg, mode, train=False, key=None)
+        return h, (rcs, rhs, kc, vc) + ((vsc,) if packed else ())
+
+    h, ys = jax.lax.scan(group_body, h, group_xs)
+    rcs, rhs, ks, vs_ = ys[:4]
+    new_cache = dict(cache, rec_conv=dput(cache["rec_conv"], rcs, 2),
+                     rec_h=dput(cache["rec_h"], rhs, 2),
+                     attn_k=dput(cache["attn_k"], ks, 1),
+                     attn_v=dput(cache["attn_v"], vs_, 1))
+    if packed:
+        new_cache["attn_v_scale"] = dput(cache["attn_v_scale"], ys[4], 1)
+
+    if "tail" in params:
+        def tail_body(h2, xs2):
+            rp, cs, hf = xs2
+            h2, cs, hf = rglru_block_chunk(rp["mix"], h2, cs, hf, n_valid,
+                                           cfg, mode)
+            h2 = _rg_mlp(rp, h2, cfg, mode, train=False, key=None)
+            return h2, (cs, hf)
+
+        h, (tcs, ths) = jax.lax.scan(
+            tail_body, h, (params["tail"],
+                           dslice(cache["tail_conv"], 1, reset=True),
+                           dslice(cache["tail_h"], 1, reset=True)))
+        new_cache["tail_conv"] = dput(cache["tail_conv"], tcs, 1)
+        new_cache["tail_h"] = dput(cache["tail_h"], ths, 1)
+
+    hl = jax.lax.dynamic_slice_in_dim(h, n_valid - 1, 1, axis=1)
+    hn = rms_norm(hl, params["final_norm"]["scale"])
     w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = jnp.einsum("bsd,dv->bsv", hn, w.astype(hn.dtype))[:, 0]
     return logits, new_cache

@@ -28,7 +28,8 @@ from repro.configs.base import ModelConfig
 from repro.core.bitpack import pack_bits, packed_width
 from repro.core.layers import QuantMode, qmatmul, shared_pack
 from repro.models.attention import (
-    decode_attention, decode_attention_packed, flash_attention, v_cache_scale,
+    chunk_attention, decode_attention, decode_attention_packed,
+    flash_attention, prefill_attention_packed, v_cache_scale,
 )
 from repro.launch.shardctx import (hint_attn_q, hint_ffn_hidden, hint_gathered, hint_residual)
 from repro.models.common import (
@@ -437,10 +438,15 @@ def _decode_self_block(bp, h, kc, vc, cfg, mode, pos, window, v_scale=None):
     """One-token self-attn block against cache. h: (B,1,D); pos: (B,) —
     each row writes its KV at its own position and masks from its own
     length (rows of a continuous-batching slot batch sit at different
-    offsets). kv_bits=1: the new K/V row is sign-packed before the write
-    and attention runs on the uint32 bitplanes (XNOR+popcount scores,
-    per-head `v_scale` V accumulation) — float K/V never touch the cache."""
+    offsets). A row with pos < 0 is inactive: it computes garbage but
+    writes NOTHING to the cache — the scheduler marks freed and
+    mid-chunked-admission slots this way so interleaved decode bursts
+    cannot corrupt a partially prefilled row. kv_bits=1: the new K/V row
+    is sign-packed before the write and attention runs on the uint32
+    bitplanes (XNOR+popcount scores, per-head `v_scale` V accumulation)
+    — float K/V never touch the cache."""
     b = h.shape[0]
+    t_max = kc.shape[1]
     xn = _norm(bp["ln1"], h, cfg)
     q, k_new, v_new = _qkv(bp["attn"], xn, cfg, mode, False, None)
     if cfg.pos == "rope":
@@ -448,14 +454,15 @@ def _decode_self_block(bp, h, kc, vc, cfg, mode, pos, window, v_scale=None):
         q = rope(q, positions, cfg.rope_theta)
         k_new = rope(k_new, positions, cfg.rope_theta)
     rows = jnp.arange(b)
+    wpos = jnp.where(pos >= 0, pos, t_max)                     # inactive: drop
     if cfg.kv_bits == 1:
-        kc = kc.at[rows, pos].set(pack_bits(k_new[:, 0]))
-        vc = vc.at[rows, pos].set(pack_bits(v_new[:, 0]))
+        kc = kc.at[rows, wpos].set(pack_bits(k_new[:, 0]), mode="drop")
+        vc = vc.at[rows, wpos].set(pack_bits(v_new[:, 0]), mode="drop")
         out = decode_attention_packed(q, kc, vc, v_scale, pos + 1,
                                       window=window)
     else:
-        kc = kc.at[rows, pos].set(k_new[:, 0].astype(kc.dtype))
-        vc = vc.at[rows, pos].set(v_new[:, 0].astype(vc.dtype))
+        kc = kc.at[rows, wpos].set(k_new[:, 0].astype(kc.dtype), mode="drop")
+        vc = vc.at[rows, wpos].set(v_new[:, 0].astype(vc.dtype), mode="drop")
         out = decode_attention(q, kc, vc, pos + 1, window=window)
     out = out.reshape(b, 1, cfg.n_heads * cfg.head_dim)
     h = h + qmatmul(out, bp["attn"]["wo"], mode)
@@ -467,7 +474,8 @@ def transformer_decode(params: dict, cfg: ModelConfig, token: Array,
                        cache: dict, pos: Array) -> tuple[Array, dict]:
     """One decode step. token: (B,) int32; pos: scalar or (B,) int32 (per-row
     write position = number of tokens already in that row's context; a
-    scalar is broadcast — the static same-length batch). Returns
+    scalar is broadcast — the static same-length batch; pos[b] < 0 marks
+    row b inactive: it computes but writes nothing to the cache). Returns
     (logits (B,V), updated cache)."""
     mode = QuantMode(cfg.quant)
     packed = cfg.kv_bits == 1
@@ -529,3 +537,175 @@ def transformer_decode(params: dict, cfg: ModelConfig, token: Array,
 
     logits = _head(params, cfg, h)[:, 0]
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill: advance one slot's prompt by one fixed-shape chunk
+# ---------------------------------------------------------------------------
+def _chunk_self_block(bp, h, kc, vc, vs, cfg, mode, positions, widx, kv_len,
+                      pos, n_valid, window):
+    """One self-attn block over a prefill chunk against the slot's cache
+    row. h: (1, C, D); kc/vc: (1, T, kv, hd|hdw); vs: (1, kv) running
+    per-head V scale (kv_bits=1) or None. The chunk's K/V rows are written
+    first (pad rows i >= n_valid drop), then the chunk's queries attend to
+    everything written so far — cross-chunk rows AND the intra-chunk causal
+    triangle come out of the same cache panel. kv_bits=1: the write is a
+    sign-pack, the V scale updates as a running mean over [0, kv_len), and
+    attention is XOR+popcount over the uint32 bitplanes
+    (`prefill_attention_packed`) — float K/V never touch the cache."""
+    c = h.shape[1]
+    xn = _norm(bp["ln1"], h, cfg)
+    q, k_new, v_new = _qkv(bp["attn"], xn, cfg, mode, False, None)
+    if cfg.pos == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        k_new = rope(k_new, positions, cfg.rope_theta)
+    if cfg.kv_bits == 1:
+        kc = kc.at[0, widx].set(pack_bits(k_new[0]), mode="drop")
+        vc = vc.at[0, widx].set(pack_bits(v_new[0]), mode="drop")
+        # running mean |v| over (positions so far, head_dim): equals the
+        # whole-prompt v_cache_scale once the last chunk lands
+        absm = jnp.mean(jnp.abs(v_new[0].astype(jnp.float32)), axis=-1)
+        msk = (jnp.arange(c) < n_valid)[:, None]
+        vs = (vs * pos.astype(jnp.float32)
+              + jnp.sum(absm * msk, axis=0)[None]) / kv_len.astype(jnp.float32)
+        out = prefill_attention_packed(q, kc, vc, vs, kv_len, pos,
+                                       window=window)
+    else:
+        kc = kc.at[0, widx].set(k_new[0].astype(kc.dtype), mode="drop")
+        vc = vc.at[0, widx].set(v_new[0].astype(vc.dtype), mode="drop")
+        out = chunk_attention(q, kc, vc, kv_len, pos, window=window)
+    out = out.reshape(1, c, cfg.n_heads * cfg.head_dim)
+    h = h + qmatmul(out, bp["attn"]["wo"], mode)
+    h, _ = ffn_sublayer(bp, h, cfg, mode, train=False, key=None)
+    return h, kc, vc, vs
+
+
+def transformer_prefill_chunk(params: dict, cfg: ModelConfig, tokens: Array,
+                              cache: dict, slot: Array, pos: Array,
+                              n_valid: Array, *, img_emb: Array | None = None
+                              ) -> tuple[Array, dict]:
+    """Advance one slot's prefill by one fixed-shape chunk.
+
+    tokens: (1, C) int32, right-padded — only the first `n_valid` are real;
+    cache: the scheduler's FULL shared slot cache; slot / pos / n_valid:
+    traced int32 scalars (pos = tokens already written for this slot). The
+    chunk's K/V rows land incrementally at positions [pos, pos+n_valid) of
+    the slot's cache row, so admission compiles once per chunk shape, never
+    per prompt length, and a decode burst can run between chunks. Returns
+    (logits (1, V) at the chunk's last real token, updated cache) — the
+    logits feed first-token sampling on the final chunk and are dead-code
+    eliminated for earlier chunks. img_emb (vlm) is passed on the first
+    chunk only: it computes and caches the per-group cross-attention KV;
+    later chunks cross-attend to the cached (packed, when kv_bits=1) rows.
+    """
+    mode = QuantMode(cfg.quant)
+    packed = cfg.kv_bits == 1
+    _, c = tokens.shape
+    window = cfg.local_window
+    slot = jnp.asarray(slot, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    idx = jnp.arange(c, dtype=jnp.int32)
+    positions = idx + pos
+    kv_len = pos + n_valid
+    h = params["embed"][tokens].astype(cfg.activation_dtype)
+    if cfg.pos == "sinusoidal":
+        h = h + sinusoidal_pos(positions, cfg.d_model)[None].astype(h.dtype)
+
+    def dslice(x, ax):
+        return jax.lax.dynamic_slice_in_dim(x, slot, 1, axis=ax)
+
+    def dput(x, rows, ax):
+        return jax.lax.dynamic_update_slice_in_dim(x, rows.astype(x.dtype),
+                                                   slot, axis=ax)
+
+    if cfg.family == "vlm":
+        t_max = cache["k"].shape[3]
+        widx = jnp.where(idx < n_valid, positions, t_max)
+        kcs_all, vcs_all = dslice(cache["k"], 2), dslice(cache["v"], 2)
+        xk_all, xv_all = dslice(cache["xk"], 1), dslice(cache["xv"], 1)
+        group_xs = (params["groups"], kcs_all, vcs_all) + \
+            ((dslice(cache["v_scale"], 2),) if packed else ()) + \
+            (xk_all, xv_all) + \
+            ((dslice(cache["xv_scale"], 1),) if packed else ())
+
+        def group_body(h, xs):
+            if packed:
+                gp, kcs, vcs, vss, xk, xv, xvs = xs
+            else:
+                gp, kcs, vcs, xk, xv = xs
+                xvs = None
+            ca = gp["cross"]["attn"]
+            if img_emb is not None:     # first chunk: compute + cache xKV
+                img = img_emb.astype(h.dtype)
+                ni = img.shape[1]
+                imgs = shared_pack(img, (ca["wk"], ca["wv"]), mode)
+                xkf = qmatmul(imgs, ca["wk"], mode).reshape(
+                    1, ni, cfg.n_kv_heads, cfg.head_dim)
+                xvf = qmatmul(imgs, ca["wv"], mode).reshape(
+                    1, ni, cfg.n_kv_heads, cfg.head_dim)
+                if packed:
+                    xk, xv, xvs = (pack_bits(xkf), pack_bits(xvf),
+                                   v_cache_scale(xvf))
+                else:
+                    xk, xv = xkf.astype(xk.dtype), xvf.astype(xv.dtype)
+            # cross-attn from the cached image KV (decode-style)
+            xn = _norm(gp["cross"]["ln1"], h, cfg)
+            q = qmatmul(xn, ca["wq"], mode).reshape(
+                1, c, cfg.n_heads, cfg.head_dim)
+            if packed:
+                out = prefill_attention_packed(q, xk, xv, xvs, xk.shape[1],
+                                               0, causal=False)
+            else:
+                out = chunk_attention(q, xk, xv, xk.shape[1], 0, causal=False)
+            out = out.reshape(1, c, cfg.n_heads * cfg.head_dim)
+            gate = jnp.tanh(ca["gate"]).astype(out.dtype)
+            h = h + gate * qmatmul(out, ca["wo"], mode)
+            h, _ = ffn_sublayer(gp["cross"], h, cfg, mode, train=False,
+                                key=None)
+
+            def self_body(h2, xs2):
+                sp, kc, vc, vs = ((*xs2, None) if not packed else xs2)
+                h2, kc, vc, vs = _chunk_self_block(
+                    sp, h2, kc, vc, vs, cfg, mode, positions, widx, kv_len,
+                    pos, n_valid, window)
+                return h2, (kc, vc) + ((vs,) if packed else ())
+
+            self_xs = (gp["self"], kcs, vcs) + ((vss,) if packed else ())
+            h, st = jax.lax.scan(self_body, h, self_xs)
+            return h, st + (xk, xv) + ((xvs,) if packed else ())
+
+        h, ys = jax.lax.scan(group_body, h, group_xs)
+        if packed:
+            ks, vls, vss, xks, xvs_, xvss = ys
+        else:
+            ks, vls, xks, xvs_ = ys
+        new_cache = dict(cache, k=dput(cache["k"], ks, 2),
+                         v=dput(cache["v"], vls, 2),
+                         xk=dput(cache["xk"], xks, 1),
+                         xv=dput(cache["xv"], xvs_, 1))
+        if packed:
+            new_cache["v_scale"] = dput(cache["v_scale"], vss, 2)
+            new_cache["xv_scale"] = dput(cache["xv_scale"], xvss, 1)
+    else:
+        t_max = cache["k"].shape[2]
+        widx = jnp.where(idx < n_valid, positions, t_max)
+        block_xs = (params["blocks"], dslice(cache["k"], 1),
+                    dslice(cache["v"], 1)) + \
+            ((dslice(cache["v_scale"], 1),) if packed else ())
+
+        def block_body(h, xs):
+            bp, kc, vc, vs = ((*xs, None) if not packed else xs)
+            h, kc, vc, vs = _chunk_self_block(
+                bp, h, kc, vc, vs, cfg, mode, positions, widx, kv_len, pos,
+                n_valid, window)
+            return h, (kc, vc) + ((vs,) if packed else ())
+
+        h, st = jax.lax.scan(block_body, h, block_xs)
+        new_cache = dict(cache, k=dput(cache["k"], st[0], 1),
+                         v=dput(cache["v"], st[1], 1))
+        if packed:
+            new_cache["v_scale"] = dput(cache["v_scale"], st[2], 1)
+
+    hl = jax.lax.dynamic_slice_in_dim(h, n_valid - 1, 1, axis=1)
+    return _head(params, cfg, hl)[:, 0], new_cache

@@ -9,7 +9,12 @@ sampling and token accumulation on device.
 
 `generate(requests)` is a thin shim over the scheduler — it accepts
 ragged prompt lengths and honors each request's own `max_new_tokens` /
-`eos_id`. `generate_static(requests)` keeps the legacy same-length
+`eos_id`. Pass `prefill_chunk=C` to admit prompts through the chunked
+pipeline: fixed-shape C-token chunks interleave with bounded decode
+bursts, so a long prompt's admission no longer freezes in-flight slots
+(and prefill compiles once per chunk shape, never per prompt length —
+with kv_bits=1 the cross-chunk attention runs XOR+popcount over the
+already-written K bitplanes, `kernels.prefill_attention`). `generate_static(requests)` keeps the legacy same-length
 fixed-step batch loop (the baseline the continuous-batching benchmark
 compares against); it too accumulates tokens on device and transfers
 once per call, never per step.
@@ -49,7 +54,9 @@ __all__ = ["Request", "Scheduler", "ServingEngine"]
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_len: int = 512,
                  mesh=None, freeze: bool = False, slots: int = 4,
-                 seed: int = 0, kv_bits: int | None = None):
+                 seed: int = 0, kv_bits: int | None = None,
+                 prefill_chunk: int | None = None,
+                 interleave_steps: int = 8):
         if kv_bits is not None:
             if kv_bits not in (0, 1):
                 raise ValueError(f"kv_bits must be 0 (float cache) or 1 "
@@ -61,6 +68,8 @@ class ServingEngine:
         self.max_len = max_len
         self.mesh = mesh
         self.slots = slots
+        self.prefill_chunk = prefill_chunk
+        self.interleave_steps = interleave_steps
         self.frozen = params_frozen(params)
         self._key = jax.random.PRNGKey(seed)
         self._sched: Scheduler | None = None
@@ -136,10 +145,15 @@ class ServingEngine:
         return sub
 
     def scheduler(self) -> Scheduler:
-        """The engine's continuous-batching scheduler (built lazily)."""
+        """The engine's continuous-batching scheduler (built lazily).
+        `prefill_chunk` (construction arg) switches admission to the
+        chunked pipeline: prompts advance through the slot cache in
+        fixed-shape chunks interleaved with bounded decode bursts."""
         if self._sched is None:
             self._sched = Scheduler(self.cfg, self.model, self.params,
-                                    n_slots=self.slots, max_len=self.max_len)
+                                    n_slots=self.slots, max_len=self.max_len,
+                                    prefill_chunk=self.prefill_chunk,
+                                    interleave_steps=self.interleave_steps)
         return self._sched
 
     def generate(self, requests: list[Request], key=None) -> list[np.ndarray]:

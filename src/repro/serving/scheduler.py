@@ -1,36 +1,55 @@
 """Continuous-batching scheduler: fixed decode slots over a request queue.
 
-Admission: a pending request is prefilled alone (batch 1) and its
-KV-cache / recurrent-state rows are written into a free slot of the
-shared batch cache (`models.api.cache_batch_axes` finds the batch axis of
-every cache leaf structurally, so the same insertion works for dense,
-MoE, audio, VLM, SSM and hybrid families — for the recurrent families
-the row overwrite IS the per-slot state reset). This covers the
-bit-resident cache too: with kv_bits=1 the K/V leaves are plain uint32
-bitplane arrays (plus fp32 per-head V-scale leaves), each with an
-ordinary batch axis, so slot insertion and recycling need no special
-casing. Its first token is sampled from the prefill logits on device.
+Admission: with `prefill_chunk=None` (legacy) a pending request is
+prefilled alone (batch 1) in one fused jit call and its KV-cache /
+recurrent-state rows are written into a free slot of the shared batch
+cache (`models.api.cache_batch_axes` finds the batch axis of every cache
+leaf structurally, so the same insertion works for dense, MoE, audio,
+VLM, SSM and hybrid families — for the recurrent families the row
+overwrite IS the per-slot state reset). This covers the bit-resident
+cache too: with kv_bits=1 the K/V leaves are plain uint32 bitplane
+arrays (plus fp32 per-head V-scale leaves), each with an ordinary batch
+axis, so slot insertion and recycling need no special casing. Its first
+token is sampled from the prefill logits on device.
+
+Chunked admission (`prefill_chunk=C`): the prompt advances through the
+slot cache one fixed-shape (1, C) chunk at a time via the family's
+`Model.prefill_chunk` — KV rows (packed bitplanes + running V scale when
+kv_bits=1), recurrent conv/h states and the rg ring buffer all land
+incrementally. Between chunks the scheduler runs a decode burst bounded
+to `interleave_steps`, so admitting a long prompt no longer freezes
+every in-flight slot for the whole prefill (time-to-first-token for the
+new request trades against inter-token latency for the running ones),
+and admission compiles once per chunk shape — never per prompt length.
+At most one chunk advances between bursts. Rows mid-admission are marked
+with a pos = -1 sentinel during bursts: every family's decode computes
+but WRITES NOTHING for such rows, so an interleaved burst cannot corrupt
+a partially prefilled slot (models.transformer / models.ssm_lm).
 
 Decode: one jit'd step advances every slot together — per-slot position
 vector, per-slot temperature, per-slot PRNG key — inside a
 lax.while_loop that only returns control to the host when some slot
-finishes (its own `max_new_tokens` budget or its `eos_id`). Output
-tokens accumulate in a device buffer, so the host syncs once per
-completion event, not once per token. A freed slot is recycled to the
-next queued request immediately.
+finishes (its own `max_new_tokens` budget or its `eos_id`) or, while an
+admission is mid-flight, after `interleave_steps` steps. Output tokens
+accumulate in a device buffer, so the host syncs once per completion
+event, not once per token. A freed slot is recycled to the next queued
+request immediately. All wall-time stats sync the device before reading
+the clock (`prefill_s` / `decode_s` measure compute, not dispatch).
 
 Ordering guarantees: completions are delivered in completion order;
 requests that finish in the same burst are delivered in submission
 order. Greedy outputs are batch-composition-independent — bit-identical
-whether the request runs alone or in mixed traffic — for every family
-whose per-row compute is independent; the one exception is MoE under
-expert-capacity pressure, where capacity-based dispatch drops tokens by
-*batch-global* count (models.common.moe_ffn), so slot neighbors can
-evict each other's expert assignments exactly as they would in any
-capacity-routed server. Sampled outputs (temperature > 0) are a
-deterministic replay of (base key, submission index since the last
-reseed, token index) — the same submissions after the same reseed
-reproduce the same draws regardless of slot assignment.
+whether the request runs alone or in mixed traffic, whole-prompt or
+chunked admission — for every family whose per-row compute is
+independent; the one exception is MoE under expert-capacity pressure,
+where capacity-based dispatch drops tokens by *batch-global* count
+(models.common.moe_ffn), so slot neighbors can evict each other's expert
+assignments exactly as they would in any capacity-routed server (and a
+padded final chunk adds pad tokens to that same global count). Sampled
+outputs (temperature > 0) are a deterministic replay of (base key,
+submission index since the last reseed, token index) — the same
+submissions after the same reseed reproduce the same draws regardless
+of slot assignment.
 """
 from __future__ import annotations
 
@@ -67,6 +86,16 @@ class Completion:
     # requests finishing inside the same burst share a timestamp, so under
     # run()'s drain tail this is an upper bound on true latency
     latency: float
+    # seconds, submit -> first token sampled (end of the request's own
+    # admission — the number chunked prefill exists to keep flat)
+    ttft: float = 0.0
+    # inter-token intervals (seconds) for decode tokens, at burst
+    # granularity: a burst's n tokens split the burst duration evenly and
+    # time the slot spent stalled BEFORE the burst (behind another
+    # request's admission) lands on its first token's interval — exactly
+    # the head-of-line blocking the interleave benchmark asserts on
+    itl: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros((0,)))
 
 
 @dataclasses.dataclass
@@ -74,6 +103,17 @@ class _Running:
     rid: int
     prompt_len: int
     max_new: int
+
+
+@dataclasses.dataclass
+class _Admission:
+    """One request mid-chunked-admission: its slot is reserved (neither
+    free nor running) and its prompt advances one chunk per poll."""
+    slot: int
+    rid: int
+    req: Request
+    n_chunks: int
+    next: int = 0
 
 
 class Scheduler:
@@ -84,13 +124,24 @@ class Scheduler:
     returns {rid: Completion} for everything that completed during it.
     Completions are handed to the caller, not retained — scheduler state
     stays bounded no matter how long it serves.
+
+    prefill_chunk: None = whole-prompt admission (one compile per
+    prompt-length bucket); C > 0 = chunked admission (one compile per
+    chunk *shape*, bounded regardless of traffic — see
+    `prefill_shape_count`). interleave_steps bounds how long a decode
+    burst runs while an admission is mid-flight.
     """
 
     def __init__(self, cfg: ModelConfig, model: Model, params, *,
-                 n_slots: int = 4, max_len: int = 512, key: Array | None = None):
+                 n_slots: int = 4, max_len: int = 512,
+                 key: Array | None = None, prefill_chunk: int | None = None,
+                 interleave_steps: int = 8):
+        assert prefill_chunk is None or prefill_chunk >= 1
         self.cfg, self.model, self.params = cfg, model, params
         self.n_slots, self.max_len = n_slots, max_len
         self.max_out = max_len
+        self.prefill_chunk = prefill_chunk
+        self.interleave_steps = interleave_steps
         self._axes = cache_batch_axes(model, max_len)
         self._base_key = key if key is not None else jax.random.PRNGKey(0)
         self._key_rid0 = 0      # rid the current base key was set at
@@ -98,9 +149,16 @@ class Scheduler:
         self._queue: deque[tuple[int, Request]] = deque()
         self._free = list(range(n_slots))
         self._running: dict[int, _Running] = {}
+        self._admitting: deque[_Admission] = deque()
         self._submit_time: dict[int, float] = {}    # pending/running only
+        self._ttft: dict[int, float] = {}
+        self._itl: dict[int, list] = {}
+        self._slot_last_tok: dict[int, float] = {}
+        self._prev_out_len = np.zeros((n_slots,), np.int64)
+        self._prefill_shapes: set = set()
         self.stats = {"prefill_tokens": 0, "prefill_s": 0.0, "bursts": 0,
-                      "decode_s": 0.0, "tokens_out": 0, "completed": 0}
+                      "decode_s": 0.0, "tokens_out": 0, "completed": 0,
+                      "max_admit_stall_tokens": 0}
 
         self._cache = model.init_cache(n_slots, max_len)
         self._state = {
@@ -127,7 +185,8 @@ class Scheduler:
                 p, st, c, t, slot, rkey, b, tp, e, img),
             donate_argnums=(1, 2))
         self._burst = jax.jit(self._burst_impl, donate_argnums=(1, 2),
-                              static_argnums=(3,))
+                              static_argnums=(3, 4))
+        self._chunk_jits: dict[tuple[bool, bool], Any] = {}
 
     # -- device-side pieces -------------------------------------------------
     def _admit_impl(self, params, state, cache, tokens, slot, rkey,
@@ -145,6 +204,22 @@ class Scheduler:
             lambda c, s, ax: jax.lax.dynamic_update_slice_in_dim(
                 c, s.astype(c.dtype), slot, axis=ax),
             cache, slot_cache, self._axes)
+        return self._first_token(state, cache, logits1, slot, prompt_len,
+                                 rkey, budget, temp, eos)
+
+    def _chunk_final_impl(self, params, state, cache, tokens, slot, pos,
+                          n_valid, rkey, budget, temp, eos, img):
+        """Last chunk of a chunked admission: advance the slot cache by the
+        chunk, then sample the first token and arm the slot's decode state
+        — the chunked twin of `_admit_impl`'s tail."""
+        kw = {"img_emb": img} if img is not None else {}
+        logits1, cache = self.model.prefill_chunk(params, tokens, cache,
+                                                  slot, pos, n_valid, **kw)
+        return self._first_token(state, cache, logits1, slot, pos + n_valid,
+                                 rkey, budget, temp, eos)
+
+    def _first_token(self, state, cache, logits1, slot, prompt_len, rkey,
+                     budget, temp, eos):
         temp = jnp.asarray(temp, jnp.float32)
         tok = sample_tokens(logits1, jax.random.fold_in(rkey, 0)[None],
                             temp[None])[0]
@@ -164,26 +239,35 @@ class Scheduler:
         }
         return state, cache
 
-    def _burst_impl(self, params, state, cache, drain=False):
+    def _burst_impl(self, params, state, cache, drain=False, max_steps=0):
         """Decode every slot until some slot completes (or none is active).
         The host only sees the loop's final state: one sync per completion
         event, never per token. With `drain` (queue empty: a freed slot
         has nothing to recycle to), run until every slot completes — one
-        sync for the whole tail."""
+        sync for the whole tail. With `max_steps` > 0 (an admission is
+        mid-flight), also yield after that many steps so the next prompt
+        chunk can advance. Inactive rows decode with a pos = -1 sentinel:
+        they compute garbage but write neither cache rows nor recurrent
+        state, so partially admitted slots stay intact."""
         rows = jnp.arange(self.n_slots)
+        start = state["steps"]
 
         def cond(carry):
             st, _ = carry
             go = jnp.any(st["active"])
-            return go if drain else go & ~jnp.any(st["done"])
+            if not drain:
+                go &= ~jnp.any(st["done"])
+            if max_steps:
+                go &= (st["steps"] - start) < max_steps
+            return go
 
         def body(carry):
             st, cache = carry
-            logits, cache = self.model.decode(params, st["cur"], cache,
-                                              st["pos"])
+            act = st["active"]
+            pos = jnp.where(act, st["pos"], -1)
+            logits, cache = self.model.decode(params, st["cur"], cache, pos)
             keys = step_keys(st["rkey"], st["out_len"])
             nxt = sample_tokens(logits, keys, st["temp"])
-            act = st["active"]
             nxt = jnp.where(act, nxt, st["cur"])
             # inactive rows write out of bounds -> dropped
             idx = jnp.where(act, st["out_len"], self.max_out)
@@ -219,9 +303,27 @@ class Scheduler:
 
     @property
     def idle(self) -> bool:
-        return not self._queue and not self._running
+        return (not self._queue and not self._running
+                and not self._admitting)
+
+    @property
+    def prefill_shape_count(self) -> int:
+        """Distinct prefill shapes dispatched so far — an honest compile-
+        count proxy (each distinct shape is one XLA compilation). Chunked
+        admission is bounded by its chunk-shape variants; whole-prompt
+        admission grows with every new prompt length."""
+        return len(self._prefill_shapes)
+
+    def _note_first_token(self, slot: int, rid: int) -> None:
+        now = time.time()
+        self._ttft[rid] = now - self._submit_time[rid]
+        self._slot_last_tok[slot] = now
+        self._prev_out_len[slot] = 1
 
     def _admit(self, slot: int, rid: int, req: Request) -> None:
+        if self._running:   # in-flight slots stall for this whole prefill
+            self.stats["max_admit_stall_tokens"] = max(
+                self.stats["max_admit_stall_tokens"], int(req.prompt.size))
         t0 = time.time()
         tokens = jax.device_put(req.prompt[None])
         rkey = request_key(self._base_key, rid - self._key_rid0)
@@ -236,10 +338,100 @@ class Scheduler:
             self._state, self._cache = self._admit_jit(
                 self.params, self._state, self._cache, tokens, slot,
                 rkey, req.max_new_tokens, float(req.temperature), eos)
+        jax.block_until_ready(self._state["done"])   # honest prefill_s
+        self.stats["prefill_s"] += time.time() - t0
+        self._prefill_shapes.add(("whole", int(req.prompt.size)))
         self._running[slot] = _Running(rid, int(req.prompt.size),
                                        req.max_new_tokens)
         self.stats["prefill_tokens"] += int(req.prompt.size)
+        self._note_first_token(slot, rid)
+
+    # -- chunked admission --------------------------------------------------
+    def _chunk_call(self, final: bool, with_img: bool):
+        """jit per (final, with_img) chunk variant — 2 shapes for most
+        families, up to 4 for vlm. Mid chunks return only the cache, so
+        the logits head is dead-code eliminated from their executable."""
+        fn = self._chunk_jits.get((final, with_img))
+        if fn is None:
+            if final:
+                def impl(p, st, c, t, slot, pos, nv, rkey, b, tp, e, *img):
+                    return self._chunk_final_impl(
+                        p, st, c, t, slot, pos, nv, rkey, b, tp, e,
+                        img[0] if img else None)
+                fn = jax.jit(impl, donate_argnums=(1, 2))
+            else:
+                def impl(p, c, t, slot, pos, nv, *img):
+                    kw = {"img_emb": img[0]} if img else {}
+                    return self.model.prefill_chunk(p, t, c, slot, pos, nv,
+                                                    **kw)[1]
+                fn = jax.jit(impl, donate_argnums=(1,))
+            self._chunk_jits[(final, with_img)] = fn
+        return fn
+
+    def _start_admission(self, slot: int, rid: int, req: Request) -> None:
+        c = self.prefill_chunk
+        n_chunks = max(1, -(-int(req.prompt.size) // c))
+        self._admitting.append(_Admission(slot, rid, req, n_chunks))
+
+    def _advance_admission(self) -> None:
+        """Advance the head admission by exactly one chunk."""
+        adm = self._admitting[0]
+        req, slot, c = adm.req, adm.slot, self.prefill_chunk
+        lo = adm.next * c
+        n_valid = min(c, int(req.prompt.size) - lo)
+        final = adm.next == adm.n_chunks - 1
+        with_img = self.cfg.family == "vlm" and adm.next == 0
+        if self._running:   # running slots wait only for THIS chunk
+            self.stats["max_admit_stall_tokens"] = max(
+                self.stats["max_admit_stall_tokens"], n_valid)
+        t0 = time.time()
+        chunk = np.zeros((1, c), np.int32)
+        chunk[0, :n_valid] = req.prompt[lo:lo + n_valid]
+        tokens = jax.device_put(chunk)
+        img_args = ()
+        if with_img:
+            assert req.img_emb is not None, "vlm request needs img_emb"
+            img_args = (jax.device_put(np.asarray(req.img_emb)[None]),)
+        if final:
+            rkey = request_key(self._base_key, adm.rid - self._key_rid0)
+            eos = -1 if req.eos_id is None else int(req.eos_id)
+            self._state, self._cache = self._chunk_call(True, with_img)(
+                self.params, self._state, self._cache, tokens, slot, lo,
+                n_valid, rkey, req.max_new_tokens, float(req.temperature),
+                eos, *img_args)
+        else:
+            self._cache = self._chunk_call(False, with_img)(
+                self.params, self._cache, tokens, slot, lo, n_valid,
+                *img_args)
+        jax.block_until_ready(self._cache)           # honest prefill_s
         self.stats["prefill_s"] += time.time() - t0
+        self.stats["prefill_tokens"] += n_valid
+        self._prefill_shapes.add(("chunk", c, final, with_img))
+        adm.next += 1
+        if final:
+            self._admitting.popleft()
+            self._running[slot] = _Running(adm.rid, int(req.prompt.size),
+                                           req.max_new_tokens)
+            self._note_first_token(slot, adm.rid)
+
+    def _note_burst_tokens(self, t_start: float) -> None:
+        """Burst-granularity inter-token bookkeeping: a burst's n tokens
+        split the burst duration evenly, and the time a slot sat stalled
+        BEFORE the burst (e.g. behind another request's admission) lands
+        on its first token's interval — so a head-of-line-blocking prefill
+        shows up as one large interval instead of being amortized away."""
+        now = time.time()
+        dur = now - t_start
+        out_len = np.asarray(jax.device_get(self._state["out_len"]))
+        for slot, info in self._running.items():
+            n = int(out_len[slot] - self._prev_out_len[slot])
+            if n > 0:
+                per = dur / n
+                stall = t_start - self._slot_last_tok.get(slot, t_start)
+                self._itl.setdefault(info.rid, []).extend(
+                    [stall + per] + [per] * (n - 1))
+                self._slot_last_tok[slot] = now
+            self._prev_out_len[slot] = out_len[slot]
 
     def _harvest(self) -> list[Completion]:
         """One explicit host transfer of the done/out state; frees and
@@ -260,32 +452,46 @@ class Scheduler:
             self.stats["tokens_out"] += int(toks.size)
             self.stats["completed"] += 1
             self._free.append(slot)
+            self._slot_last_tok.pop(slot, None)
             completed.append(Completion(
-                info.rid, toks, now - self._submit_time.pop(info.rid)))
+                info.rid, toks, now - self._submit_time.pop(info.rid),
+                ttft=self._ttft.pop(info.rid, 0.0),
+                itl=np.asarray(self._itl.pop(info.rid, []))))
         idx = jnp.asarray(slots, jnp.int32)
         self._state = dict(self._state,
                            done=self._state["done"].at[idx].set(False))
         return completed
 
     def poll(self, drain: bool = False) -> list[Completion]:
-        """One scheduling round: admit into free slots, harvest admission
-        completions, else decode until the next completion event. Leave
-        `drain` False when new requests may still arrive (streaming): the
-        burst then yields at every completion so a freed slot can admit
-        them; `run()` passes drain=True for the tail, where nothing can
-        arrive mid-call and one burst finishes every slot."""
+        """One scheduling round: admit into free slots (whole-prompt, or
+        start/advance chunked admissions by AT MOST ONE chunk), harvest
+        admission completions, else decode until the next completion event
+        — bounded to `interleave_steps` while an admission is mid-flight
+        so prompt chunks and decode bursts interleave. Leave `drain` False
+        when new requests may still arrive (streaming): the burst then
+        yields at every completion so a freed slot can admit them; `run()`
+        passes drain=True for the tail, where nothing can arrive mid-call
+        and one burst finishes every slot."""
         while self._queue and self._free:
             rid, req = self._queue.popleft()
-            self._admit(self._free.pop(0), rid, req)
+            slot = self._free.pop(0)
+            if self.prefill_chunk:
+                self._start_admission(slot, rid, req)
+            else:
+                self._admit(slot, rid, req)
+        if self._admitting:
+            self._advance_admission()
         completed = self._harvest()
         if not completed and self._running:
+            bounded = self.interleave_steps if self._admitting else 0
             t0 = time.time()
             self._state, self._cache = self._burst(
                 self.params, self._state, self._cache,
-                drain and not self._queue)
+                drain and not self._queue and not self._admitting, bounded)
             jax.block_until_ready(self._state["done"])
             self.stats["decode_s"] += time.time() - t0
             self.stats["bursts"] += 1
+            self._note_burst_tokens(t0)
             completed = self._harvest()
         return completed
 

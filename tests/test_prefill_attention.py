@@ -1,0 +1,116 @@
+"""Chunked-prefill attention kernel: the Pallas kernel must be bit-exact
+vs the jnp oracle across ragged lengths, sliding windows, GQA/MQA, odd
+head_dim padded tails, query-block boundaries, non-causal (cross-attn)
+masks, and under jit with traced positions — and must degenerate exactly
+to the decode kernel at S == 1, q_pos == kv_len - 1."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bitpack import pack_bits
+from repro.kernels import ref
+from repro.kernels.decode_attention import (
+    decode_attention_packed, v_cache_scale,
+)
+from repro.kernels.prefill_attention import prefill_attention_packed
+
+
+def _case(seed, b, s, t, hq, hkv, hd):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (b, s, hq, hd))
+    kf = jax.random.normal(ks[1], (b, t, hkv, hd))
+    vf = jax.random.normal(ks[2], (b, t, hkv, hd))
+    return q, pack_bits(kf), pack_bits(vf), v_cache_scale(vf), ks[3]
+
+
+@pytest.mark.kernels
+@pytest.mark.parametrize("b,s,t,hq,hkv,hd,window,causal,ragged", [
+    (2, 8, 24, 8, 2, 32, 0, True, True),    # GQA 4:1, word-aligned hd
+    (1, 7, 17, 4, 4, 20, 5, True, False),   # MHA, odd hd + odd S + window
+    (3, 4, 40, 8, 2, 16, 10, True, True),   # window + ragged lengths
+    (2, 5, 33, 6, 3, 33, 7, True, True),    # everything odd + window + GQA
+    (4, 3, 9, 4, 1, 64, 0, True, False),    # MQA (hkv=1), scalar lengths
+    (2, 16, 64, 8, 2, 128, 0, True, True),  # multi-word hd, multi q-block
+    (2, 6, 12, 4, 2, 32, 0, False, False),  # non-causal: packed cross-attn
+])
+def test_kernel_matches_oracle_bit_exact(b, s, t, hq, hkv, hd, window,
+                                         causal, ragged):
+    q, kp, vp, vs, lk = _case(b * 37 + s + t + hd, b, s, t, hq, hkv, hd)
+    if ragged:
+        lens = jax.random.randint(lk, (b,), s, t + 1)
+        qpos = lens - s          # chunk rows already written at the tail
+    else:
+        lens = jnp.int32(max(s, t - 3))
+        qpos = lens - s
+    want = np.asarray(ref.prefill_attention_packed_ref(
+        q, kp, vp, vs, lens, qpos, window=window, causal=causal))
+    got = np.asarray(prefill_attention_packed(
+        q, kp, vp, vs, lens, qpos, window=window, causal=causal))
+    assert got.shape == (b, s, hq, hd)
+    np.testing.assert_array_equal(want, got)
+
+
+@pytest.mark.kernels
+def test_query_block_boundaries():
+    """The q-chunk grid axis is an implementation detail: any block_q
+    (dividing S or not — the tail is padded and discarded) must give the
+    identical result."""
+    b, s, t, hq, hkv, hd = 2, 10, 30, 4, 2, 48
+    q, kp, vp, vs, lk = _case(5, b, s, t, hq, hkv, hd)
+    lens = jax.random.randint(lk, (b,), s, t + 1)
+    qpos = lens - s
+    want = np.asarray(ref.prefill_attention_packed_ref(
+        q, kp, vp, vs, lens, qpos, window=4))
+    for bq in (1, 3, 8, 16):
+        got = np.asarray(prefill_attention_packed(
+            q, kp, vp, vs, lens, qpos, window=4, block_q=bq))
+        np.testing.assert_array_equal(want, got)
+
+
+@pytest.mark.kernels
+def test_kernel_matches_oracle_under_jit():
+    """The chunked admission path calls the kernel inside jit with traced
+    (B,) lengths and positions — same bit-exact contract there."""
+    b, s, t, hq, hkv, hd = 3, 6, 21, 4, 2, 48
+    q, kp, vp, vs, lk = _case(99, b, s, t, hq, hkv, hd)
+    lens = jax.random.randint(lk, (b,), s, t + 1)
+    qpos = lens - s
+    got = np.asarray(jax.jit(
+        lambda *a: prefill_attention_packed(*a, window=5))(
+            q, kp, vp, vs, lens, qpos))
+    want = np.asarray(ref.prefill_attention_packed_ref(
+        q, kp, vp, vs, lens, qpos, window=5))
+    np.testing.assert_array_equal(want, got)
+
+
+@pytest.mark.kernels
+def test_s1_degenerates_to_decode_kernel():
+    """With a single query at the cache tail the prefill kernel IS the
+    decode kernel — one quantized attention semantics, two entry points."""
+    b, t, hq, hkv, hd = 2, 19, 4, 2, 32
+    q, kp, vp, vs, lk = _case(7, b, 1, t, hq, hkv, hd)
+    lens = jax.random.randint(lk, (b,), 1, t + 1)
+    got = np.asarray(prefill_attention_packed(q, kp, vp, vs, lens, lens - 1,
+                                              window=6))
+    want = np.asarray(decode_attention_packed(q, kp, vp, vs, lens, window=6))
+    np.testing.assert_array_equal(got, want.reshape(got.shape))
+
+
+@pytest.mark.kernels
+def test_masked_tail_is_ignored():
+    """Garbage (even all-ones words) beyond kv_len must not leak into the
+    output — recycled slot rows and not-yet-written cache tail are exactly
+    such garbage during chunked admission."""
+    b, s, t, hq, hkv, hd = 2, 4, 16, 4, 2, 32
+    q, kp, vp, vs, _ = _case(13, b, s, t, hq, hkv, hd)
+    lens = jnp.asarray([7, 11], jnp.int32)
+    qpos = lens - s
+    base = np.asarray(prefill_attention_packed(q, kp, vp, vs, lens, qpos))
+    mask = np.arange(t)[None, :, None, None] >= \
+        np.asarray(lens)[:, None, None, None]
+    kp2 = jnp.where(mask, jnp.uint32(0xFFFFFFFF), kp)
+    vp2 = jnp.where(mask, jnp.uint32(0), vp)
+    got = np.asarray(prefill_attention_packed(q, kp2, vp2, vs, lens, qpos))
+    np.testing.assert_array_equal(base, got)
