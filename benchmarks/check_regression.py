@@ -1,0 +1,91 @@
+"""Benchmark-regression gate for CI.
+
+Reads the last two entries of each committed BENCH_*.json trajectory and
+fails (exit 1) if the packed-vs-float advantage regressed by more than
+--tolerance (default 10%) between them. The advantage is a ratio that is
+always better-when-larger:
+
+    throughput pairs (tok_s_packed / tok_s_fp32):   packed / float
+    latency pairs    (us_packed   / us_float):      float / packed
+
+so "packed got 10% slower relative to float" fails regardless of which
+direction the metric is measured in. Trajectories with fewer than two
+entries, or without a recognized packed/float key pair, are skipped —
+this gate watches the *flip* PR 6 established (ROADMAP item 1: packed
+beats float in wall-clock), it does not pin absolute numbers, which vary
+with CI host load.
+
+Usage: python benchmarks/check_regression.py [--tolerance 0.10] [files...]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+# (packed_key, float_key, better): 'high' metrics divide packed/float,
+# 'low' metrics divide float/packed — the ratio is always better-if-larger.
+PAIRS = [
+    ("tok_s_packed", "tok_s_fp32", "high"),
+    ("us_packed", "us_float", "low"),
+]
+
+
+def advantage(rec: dict) -> dict[str, float]:
+    out = {}
+    for pk, fk, better in PAIRS:
+        if pk in rec and fk in rec and rec[pk] and rec[fk]:
+            out[f"{pk}/{fk}"] = (rec[pk] / rec[fk] if better == "high"
+                                 else rec[fk] / rec[pk])
+    return out
+
+
+def check_file(path: str, tolerance: float) -> list[str]:
+    with open(path) as f:
+        rows = json.load(f)
+    name = os.path.basename(path)
+    if len(rows) < 2:
+        print(f"{name}: {len(rows)} entr{'y' if len(rows) == 1 else 'ies'}, "
+              "nothing to compare — skipped")
+        return []
+    prev, last = advantage(rows[-2]), advantage(rows[-1])
+    common = sorted(set(prev) & set(last))
+    if not common:
+        print(f"{name}: no packed-vs-float key pair — skipped")
+        return []
+    failures = []
+    for key in common:
+        drop = 1.0 - last[key] / prev[key]
+        status = "REGRESSED" if drop > tolerance else "ok"
+        print(f"{name}: {key} advantage {prev[key]:.3f} -> {last[key]:.3f} "
+              f"({-drop:+.1%}) {status}")
+        if drop > tolerance:
+            failures.append(
+                f"{name}: packed-vs-float {key} regressed "
+                f"{drop:.1%} (> {tolerance:.0%} tolerance)")
+    return failures
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("files", nargs="*",
+                    help="BENCH_*.json files (default: all committed)")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="max allowed fractional drop in the packed-vs-"
+                         "float advantage (default 0.10)")
+    args = ap.parse_args(argv)
+    here = os.path.dirname(os.path.abspath(__file__))
+    files = args.files or sorted(glob.glob(os.path.join(here, "BENCH_*.json")))
+    failures = []
+    for path in files:
+        failures += check_file(path, args.tolerance)
+    if failures:
+        print("\n" + "\n".join(failures))
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

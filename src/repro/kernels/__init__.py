@@ -1,6 +1,8 @@
 """Pallas TPU kernels for the paper's binary GEMM (XNOR + popcount).
 
 binary_gemm.py — pl.pallas_call kernels (VPU popcount path, MXU fused path)
+                 + dispatch_binary_gemm{,_fused} route pickers
+tune.py        — shape-keyed autotuner + persisted per-backend route cache
 ops.py         — jit'd public wrappers with STE custom_vjp
 ref.py         — pure-jnp oracles the kernels are tested against
 """
@@ -10,7 +12,8 @@ from repro.kernels.ops import (
 )
 from repro.kernels.binary_gemm import (
     binary_gemm_vpu, binary_gemm_mxu, binary_gemm_vpu_packed,
-    binary_gemm_vpu_packed_io,
+    binary_gemm_vpu_packed_io, dispatch_binary_gemm,
+    dispatch_binary_gemm_fused,
 )
 from repro.kernels.decode_attention import decode_attention_packed
 from repro.kernels.selective_scan import selective_scan
@@ -20,6 +23,7 @@ __all__ = [
     "binary_matmul", "binary_matmul_vpu", "binary_matmul_mxu",
     "binary_conv2d", "packed_matmul", "packed_matmul_fused", "packed_conv2d",
     "binary_gemm_vpu", "binary_gemm_mxu", "binary_gemm_vpu_packed",
-    "binary_gemm_vpu_packed_io", "decode_attention_packed",
+    "binary_gemm_vpu_packed_io", "dispatch_binary_gemm",
+    "dispatch_binary_gemm_fused", "decode_attention_packed",
     "selective_scan", "pack_bits_kernel",
 ]

@@ -1,0 +1,83 @@
+"""Cached grid/block geometry for the packed Pallas kernels.
+
+Every kernel entry point used to re-derive its block clamps and pad
+amounts (`min(bm, m)`, `(-m) % bm`, grid divisions) inline on every call
+— once per trace per call site. The helpers here compute that geometry
+exactly once per distinct (shape, block) tuple and memoize it
+(`functools.lru_cache`), so repeated traces of the serving step hit a
+dict lookup, and the GEMM and attention kernels share one definition of
+the clamping/padding rules instead of three hand-copied variants.
+
+All inputs and outputs are plain Python ints (static shapes), never
+traced values — the cache key is hashable by construction and the
+results feed BlockSpecs/grids, which must be static anyway.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+from repro.core.bitpack import WORD
+
+
+class GemmGeometry(NamedTuple):
+    """Clamped blocks, pad amounts, and grid for an (M, N, KW) word GEMM."""
+    bm: int
+    bn: int
+    bk: int
+    uk: int          # words per inner popcount step (0/bk = whole block)
+    pm: int          # M rows of padding
+    pn: int          # N rows of padding
+    pk: int          # K words of padding
+    gm: int
+    gn: int
+    gk: int
+
+
+@functools.lru_cache(maxsize=None)
+def gemm_geometry(m: int, n: int, kw: int, bm: int, bn: int, bk: int,
+                  uk: int = 1) -> GemmGeometry:
+    """Geometry for binary_gemm_vpu{,_packed}: blocks clamped to the
+    operand, pads up to block multiples, grid sizes, and the inner-loop
+    word-chunk width `uk` clamped to divide bk."""
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, kw)
+    uk = min(uk, bk) if uk > 0 else 0
+    if uk > 0:
+        while bk % uk:           # uk must tile bk exactly
+            uk -= 1
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-kw) % bk
+    return GemmGeometry(bm, bn, bk, uk, pm, pn, pk,
+                        (m + pm) // bm, (n + pn) // bn, (kw + pk) // bk)
+
+
+@functools.lru_cache(maxsize=None)
+def fused_gemm_geometry(m: int, n: int, bm: int, bn: int) -> GemmGeometry:
+    """Geometry for binary_gemm_vpu_packed_io: K stays whole per block,
+    bn is clamped to a multiple of 32 (the N-axis repack width)."""
+    assert bn % WORD == 0, f"bn must be a multiple of {WORD} (N repack): {bn}"
+    bm = min(bm, m)
+    bn = min(bn, ((n + WORD - 1) // WORD) * WORD)
+    pm, pn = (-m) % bm, (-n) % bn
+    return GemmGeometry(bm, bn, 0, 0, pm, pn, 0,
+                        (m + pm) // bm, (n + pn) // bn, 1)
+
+
+class AttnGeometry(NamedTuple):
+    """Clamped blocks, pads, and grid axes for the packed attention
+    kernels' (batch-row, query-row) tiling."""
+    bb: int          # batch rows per program
+    bq: int          # query rows per program
+    pb: int          # batch rows of padding
+    ps: int          # query rows of padding
+    gb: int          # grid size along batch
+    gs: int          # grid size along query rows
+
+
+@functools.lru_cache(maxsize=None)
+def attn_geometry(b: int, s: int, block_b: int, block_q: int) -> AttnGeometry:
+    """Shared decode/prefill attention geometry. Decode passes s == 1,
+    block_q == 1; prefill tiles both axes."""
+    bb = max(1, min(block_b, b))
+    bq = max(1, min(block_q, s))
+    pb, ps = (-b) % bb, (-s) % bq
+    return AttnGeometry(bb, bq, pb, ps, (b + pb) // bb, (s + ps) // bq)

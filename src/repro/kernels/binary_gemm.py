@@ -1,18 +1,23 @@
-"""Pallas TPU kernels for binary (XNOR+popcount) GEMM.
+"""Binary (XNOR+popcount) GEMM: Pallas TPU kernels + per-shape dispatch.
 
-TPU-native adaptation of the paper's CUDA binary GEMM (DESIGN.md §4):
+TPU-native adaptation of the paper's CUDA binary GEMM (DESIGN.md §4).
+This module hosts every realization of `sign(x) @ sign(w)` and the
+dispatch layer that picks between them per shape:
 
   * `binary_gemm_vpu` — operands bit-packed along K into uint32 words
     (wire format of repro.core.bitpack). The kernel tiles (bm, bn) output
-    blocks into VMEM, streams (bm, bk)/(bn, bk) word-tiles, and accumulates
-    popcount(xor(a, b)) on the VPU's 8x128 int lanes. Final step applies
-    dot = K - 2*acc. No MXU involvement — bitwise work belongs to the
-    vector unit (the honest analogue of __popc-based SIMT kernels).
+    blocks into VMEM, streams (bm, bk)/(bn, bk) word-tiles, and
+    accumulates popcount(xor(a, b)) on the VPU's 8x128 int lanes (the
+    honest analogue of __popc-based SIMT kernels). `uk` controls how many
+    K-words feed the lanes per inner step — uk=0 broadcasts the whole
+    (bm, bn, bk) tile at once.
 
   * `binary_gemm_mxu` — fused binarize-then-matmul: float tiles are
-    sign-quantized to +-1 bf16 *in VMEM* and fed to the MXU. Saves the HBM
-    round-trip of materialized sign tensors; on v5e the MXU path wins for
-    large N (roofline discussion in EXPERIMENTS.md).
+    sign-quantized to +-1 bf16 *in VMEM* and fed to the MXU's 128x128
+    systolic array. The bitwise formulation and the MXU formulation
+    compute the same exact integers; which one wins is a per-shape
+    question (large N favors the MXU — roofline discussion in
+    EXPERIMENTS.md), which is exactly what the dispatch layer decides.
 
   * `binary_gemm_vpu_packed_io` — the bit-resident serving kernel: packed
     (or first-layer float) lhs against frozen packed weights, with the
@@ -20,8 +25,19 @@ TPU-native adaptation of the paper's CUDA binary GEMM (DESIGN.md §4):
     threshold compare (inference BN/shift-BN/bias + sign folded at freeze
     time, core.packed.fold_*_sign_threshold), and the N-axis bitpack.
     Output is (M, ceil(N/32)) uint32 in the wire format, so the next
-    binary layer consumes it directly — no int32/float activation ever
-    round-trips through HBM between binary layers.
+    binary layer consumes it directly.
+
+  * `dispatch_binary_gemm` / `dispatch_binary_gemm_fused` — the route
+    pickers callers actually use (ops.packed_matmul{,_fused} default to
+    them). Routes: 'vpu' (popcount Pallas kernel, block shapes from the
+    tuning cache), 'mxu' (±1-bf16 dot_general), 'xla' (the packed
+    popcount formulation lowered by XLA — on hosts where Pallas runs in
+    interpret mode this is the fast packed path), and 'float' (±1 f32
+    matmul fallback; exact, since ±1 dots are small integers). The
+    winner per (kernel, shape bucket, backend) comes from
+    `repro.kernels.tune`'s persisted cache; every route is bit-exact
+    with `ref.binary_matmul_packed_ref` (asserted in tests and at tune
+    time), so dispatch can never change results, only microseconds.
 
 Block shapes are multiples of (8, 128) for VPU register tiling and 128x128
 for the MXU. Grids iterate K innermost ("arbitrary") so output blocks are
@@ -36,38 +52,60 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.bitpack import WORD, pack_bits
+from repro.core.bitpack import WORD, pack_bits, unpack_bits
 from repro.core.packed import ALWAYS_THRESH
+from repro.kernels import ref
 from repro.kernels._compat import CompilerParams as _CompilerParams
+from repro.kernels._geometry import fused_gemm_geometry, gemm_geometry
 
 Array = jax.Array
+
+
+def _popcount_outer(aw: Array, bw: Array, acc: Array, uk: int) -> Array:
+    """acc (bm, bn) += sum_w popcount(xor(aw[:, w], bw[:, w])) — the XNOR
+    inner product over (bm, bk) x (bn, bk) word tiles.
+
+    `uk` is the number of K-words fed to the popcount lanes per inner
+    step: uk == 1 is the word-at-a-time outer product (lowest VMEM
+    pressure, underfills the 8x128 lanes at small bk), larger uk streams
+    a (bm, bn, uk) sliver per step, and uk == 0 (or >= bk) broadcasts the
+    whole (bm, bn, bk) tile in one shot. All variants are exact — integer
+    adds commute — so uk is purely a performance knob for the autotuner.
+    """
+    bk = aw.shape[1]
+    if uk <= 0 or uk >= bk:
+        x = jnp.bitwise_xor(aw[:, None, :], bw[None, :, :])
+        return acc + jnp.sum(jax.lax.population_count(x).astype(jnp.int32),
+                             axis=-1)
+
+    def body(c, acc):
+        a = jax.lax.dynamic_slice_in_dim(aw, c * uk, uk, 1)
+        b = jax.lax.dynamic_slice_in_dim(bw, c * uk, uk, 1)
+        x = jnp.bitwise_xor(a[:, None, :], b[None, :, :])
+        return acc + jnp.sum(jax.lax.population_count(x).astype(jnp.int32),
+                             axis=-1)
+
+    return jax.lax.fori_loop(0, bk // uk, body, acc)
 
 
 # ---------------------------------------------------------------------------
 # VPU popcount kernel over packed uint32 words
 # ---------------------------------------------------------------------------
-def _vpu_kernel(a_ref, b_ref, o_ref, *, k_true: int, bk: int, nk: int):
+def _vpu_kernel(a_ref, b_ref, o_ref, *, k_true: int, nk: int, uk: int):
     """a_ref: (bm, bk) uint32, b_ref: (bn, bk) uint32, o_ref: (bm, bn) int32."""
 
     @pl.when(pl.program_id(2) == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    a = a_ref[...]
-    b = b_ref[...]
-
-    def body(w, acc):
-        x = jnp.bitwise_xor(a[:, w][:, None], b[:, w][None, :])
-        return acc + jax.lax.population_count(x).astype(jnp.int32)
-
-    acc = jax.lax.fori_loop(0, bk, body, o_ref[...])
+    acc = _popcount_outer(a_ref[...], b_ref[...], o_ref[...], uk)
     is_last = pl.program_id(2) == nk - 1
     # fold the K - 2*acc epilogue into the final K-step
     o_ref[...] = jnp.where(is_last, jnp.int32(k_true) - 2 * acc, acc)
 
 
 def binary_gemm_vpu(a_packed: Array, b_packed: Array, k_true: int, *,
-                    bm: int = 128, bn: int = 128, bk: int = 8,
+                    bm: int = 128, bn: int = 128, bk: int = 8, uk: int = 1,
                     interpret: bool | None = None) -> Array:
     """XNOR-popcount GEMM. a_packed: (M, KW) uint32, b_packed: (N, KW)
     uint32 (rhs pre-transposed + packed). Returns (M, N) int32 =
@@ -77,26 +115,22 @@ def binary_gemm_vpu(a_packed: Array, b_packed: Array, k_true: int, *,
     m, kw = a_packed.shape
     n, kw2 = b_packed.shape
     assert kw == kw2, (kw, kw2)
-    bm = min(bm, m)
-    bn = min(bn, n)
-    bk = min(bk, kw)
-    pm, pn, pk = (-m) % bm, (-n) % bn, (-kw) % bk
+    geo = gemm_geometry(m, n, kw, bm, bn, bk, uk)
     # pad with identical words so xor(pad, pad) == 0 in the K direction;
     # M/N padding rows are sliced off after the call.
-    if pm or pk:
-        a_packed = jnp.pad(a_packed, ((0, pm), (0, pk)))
-    if pn or pk:
-        b_packed = jnp.pad(b_packed, ((0, pn), (0, pk)))
-    gm, gn, gk = a_packed.shape[0] // bm, b_packed.shape[0] // bn, a_packed.shape[1] // bk
+    if geo.pm or geo.pk:
+        a_packed = jnp.pad(a_packed, ((0, geo.pm), (0, geo.pk)))
+    if geo.pn or geo.pk:
+        b_packed = jnp.pad(b_packed, ((0, geo.pn), (0, geo.pk)))
 
     out = pl.pallas_call(
-        functools.partial(_vpu_kernel, k_true=k_true, bk=bk, nk=gk),
-        grid=(gm, gn, gk),
+        functools.partial(_vpu_kernel, k_true=k_true, nk=geo.gk, uk=geo.uk),
+        grid=(geo.gm, geo.gn, geo.gk),
         in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
+            pl.BlockSpec((geo.bm, geo.bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((geo.bn, geo.bk), lambda i, j, k: (j, k)),
         ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_specs=pl.BlockSpec((geo.bm, geo.bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((a_packed.shape[0], b_packed.shape[0]),
                                        jnp.int32),
         compiler_params=_CompilerParams(
@@ -112,8 +146,8 @@ def binary_gemm_vpu(a_packed: Array, b_packed: Array, k_true: int, *,
 # only the float activations get sign-packed here — in VMEM, fused with the
 # xor/popcount accumulation, never materializing packed activations to HBM.
 # ---------------------------------------------------------------------------
-def _vpu_packed_rhs_kernel(a_ref, b_ref, o_ref, *, k_true: int, bk: int,
-                           nk: int):
+def _vpu_packed_rhs_kernel(a_ref, b_ref, o_ref, *, k_true: int, nk: int,
+                           uk: int):
     """a_ref: (bm, bk*32) float, b_ref: (bn, bk) uint32, o_ref: (bm, bn) i32."""
 
     @pl.when(pl.program_id(2) == 0)
@@ -124,19 +158,14 @@ def _vpu_packed_rhs_kernel(a_ref, b_ref, o_ref, *, k_true: int, bk: int,
     # word-aligned, so bitpack's pure-jnp packer (the wire format's single
     # source of truth) traces fine inside the kernel
     aw = pack_bits(a_ref[...])                               # (bm, bk)
-    b = b_ref[...]
-
-    def body(w, acc):
-        x = jnp.bitwise_xor(aw[:, w][:, None], b[:, w][None, :])
-        return acc + jax.lax.population_count(x).astype(jnp.int32)
-
-    acc = jax.lax.fori_loop(0, bk, body, o_ref[...])
+    acc = _popcount_outer(aw, b_ref[...], o_ref[...], uk)
     is_last = pl.program_id(2) == nk - 1
     o_ref[...] = jnp.where(is_last, jnp.int32(k_true) - 2 * acc, acc)
 
 
 def binary_gemm_vpu_packed(a: Array, b_packed: Array, k_true: int, *,
                            bm: int = 128, bn: int = 128, bk: int = 8,
+                           uk: int = 1,
                            interpret: bool | None = None) -> Array:
     """XNOR-popcount GEMM against frozen packed weights.
 
@@ -153,24 +182,23 @@ def binary_gemm_vpu_packed(a: Array, b_packed: Array, k_true: int, *,
     # pad bits of b, so xor(pad, pad) == 0 contributes nothing
     if kw * 32 - k:
         a = jnp.pad(a, ((0, 0), (0, kw * 32 - k)), constant_values=1.0)
-    bm, bn, bk = min(bm, m), min(bn, n), min(bk, kw)
-    pm, pn, pk = (-m) % bm, (-n) % bn, (-kw) % bk
+    geo = gemm_geometry(m, n, kw, bm, bn, bk, uk)
     # word-granular K padding: b grows zero words; a grows -1.0 columns,
     # which pack to the zero word, so xor(0, 0) == 0 again cancels.
-    if pm or pk:
-        a = jnp.pad(a, ((0, pm), (0, pk * 32)), constant_values=-1.0)
-    if pn or pk:
-        b_packed = jnp.pad(b_packed, ((0, pn), (0, pk)))
-    gm, gn, gk = a.shape[0] // bm, b_packed.shape[0] // bn, b_packed.shape[1] // bk
+    if geo.pm or geo.pk:
+        a = jnp.pad(a, ((0, geo.pm), (0, geo.pk * 32)), constant_values=-1.0)
+    if geo.pn or geo.pk:
+        b_packed = jnp.pad(b_packed, ((0, geo.pn), (0, geo.pk)))
 
     out = pl.pallas_call(
-        functools.partial(_vpu_packed_rhs_kernel, k_true=k_true, bk=bk, nk=gk),
-        grid=(gm, gn, gk),
+        functools.partial(_vpu_packed_rhs_kernel, k_true=k_true, nk=geo.gk,
+                          uk=geo.uk),
+        grid=(geo.gm, geo.gn, geo.gk),
         in_specs=[
-            pl.BlockSpec((bm, bk * 32), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((geo.bm, geo.bk * 32), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((geo.bn, geo.bk), lambda i, j, kk: (j, kk)),
         ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_specs=pl.BlockSpec((geo.bm, geo.bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((a.shape[0], b_packed.shape[0]),
                                        jnp.int32),
         compiler_params=_CompilerParams(
@@ -196,20 +224,14 @@ def binary_gemm_vpu_packed(a: Array, b_packed: Array, k_true: int, *,
 # needed.
 # ---------------------------------------------------------------------------
 def _fused_epilogue_kernel(a_ref, b_ref, t_ref, f_ref, o_ref, *, k_true: int,
-                           kw: int, packed_lhs: bool):
+                           packed_lhs: bool, uk: int):
     """a_ref: (bm, kw) uint32 | (bm, kw*32) float; b_ref: (bn, kw) uint32;
     t_ref/f_ref: (1, bn) int32; o_ref: (bm, bn//32) uint32."""
     aw = a_ref[...] if packed_lhs else pack_bits(a_ref[...])   # (bm, kw)
     b = b_ref[...]
     bm = aw.shape[0]
     bn = b.shape[0]
-
-    def body(w, acc):
-        x = jnp.bitwise_xor(aw[:, w][:, None], b[:, w][None, :])
-        return acc + jax.lax.population_count(x).astype(jnp.int32)
-
-    acc = jax.lax.fori_loop(0, kw, body,
-                            jnp.zeros((bm, bn), jnp.int32))
+    acc = _popcount_outer(aw, b, jnp.zeros((bm, bn), jnp.int32), uk)
     dot = jnp.int32(k_true) - 2 * acc
     bits = (dot >= t_ref[...]) != (f_ref[...] != 0)            # (bm, bn) bool
     words = bits.reshape(bm, bn // WORD, WORD).astype(jnp.uint32)
@@ -219,7 +241,7 @@ def _fused_epilogue_kernel(a_ref, b_ref, t_ref, f_ref, o_ref, *, k_true: int,
 
 def binary_gemm_vpu_packed_io(a: Array, b_packed: Array, thresh: Array,
                               flip: Array, k_true: int, *, bm: int = 128,
-                              bn: int = 128,
+                              bn: int = 128, uk: int = 1,
                               interpret: bool | None = None) -> Array:
     """XNOR-popcount GEMM whose epilogue emits wire-format sign words.
 
@@ -244,26 +266,23 @@ def binary_gemm_vpu_packed_io(a: Array, b_packed: Array, thresh: Array,
         if kw * WORD - k_true:
             a = jnp.pad(a, ((0, 0), (0, kw * WORD - k_true)),
                         constant_values=1.0)
-    bm = min(bm, m)
-    assert bn % WORD == 0, f"bn must be a multiple of {WORD} (N repack): {bn}"
-    bn = min(bn, ((n + WORD - 1) // WORD) * WORD)   # multiple of 32 for repack
-    pm, pn = (-m) % bm, (-n) % bn
-    if pm:
-        a = jnp.pad(a, ((0, pm), (0, 0)),
+    geo = fused_gemm_geometry(m, n, bm, bn)
+    if geo.pm:
+        a = jnp.pad(a, ((0, geo.pm), (0, 0)),
                     constant_values=0 if packed_lhs else -1.0)
-    if pn:
-        b_packed = jnp.pad(b_packed, ((0, pn), (0, 0)))
+    if geo.pn:
+        b_packed = jnp.pad(b_packed, ((0, geo.pn), (0, 0)))
         # padded output channels must emit bit 1 (+1): that is the wire
         # format's pad convention, which the next layer's weight pad bits
         # cancel against. ALWAYS_THRESH makes (dot >= t) always true.
-        thresh = jnp.pad(thresh, (0, pn), constant_values=ALWAYS_THRESH)
-        flip = jnp.pad(flip, (0, pn))
-    gm, gn = a.shape[0] // bm, b_packed.shape[0] // bn
+        thresh = jnp.pad(thresh, (0, geo.pn), constant_values=ALWAYS_THRESH)
+        flip = jnp.pad(flip, (0, geo.pn))
+    bm, bn = geo.bm, geo.bn
 
     out = pl.pallas_call(
-        functools.partial(_fused_epilogue_kernel, k_true=k_true, kw=kw,
-                          packed_lhs=packed_lhs),
-        grid=(gm, gn),
+        functools.partial(_fused_epilogue_kernel, k_true=k_true,
+                          packed_lhs=packed_lhs, uk=min(uk, kw)),
+        grid=(geo.gm, geo.gn),
         in_specs=[
             pl.BlockSpec((bm, kw if packed_lhs else kw * WORD),
                          lambda i, j: (i, 0)),
@@ -305,31 +324,111 @@ def binary_gemm_mxu(x: Array, w: Array, *, bm: int = 128, bn: int = 128,
     m, k = x.shape
     k2, n = w.shape
     assert k == k2
-    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
-    pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
-    if pm or pk:
+    geo = gemm_geometry(m, n, k, bm, bn, bk)
+    if geo.pm or geo.pk:
         # K padding scheme: pad x's K-cols AND w's K-rows with +1.0, so each
         # pad position contributes sign(+1)*sign(+1) = +1 to every dot;
         # subtract the constant pk from the output afterwards. (M/N padding
         # rows/cols are simply sliced off.)
-        x = jnp.pad(x, ((0, pm), (0, pk)), constant_values=1.0)
-    if pn or pk:
-        w = jnp.pad(w, ((0, pk), (0, pn)), constant_values=1.0)
-    gm, gn, gk = x.shape[0] // bm, w.shape[1] // bn, x.shape[1] // bk
+        x = jnp.pad(x, ((0, geo.pm), (0, geo.pk)), constant_values=1.0)
+    if geo.pn or geo.pk:
+        w = jnp.pad(w, ((0, geo.pk), (0, geo.pn)), constant_values=1.0)
 
     out = pl.pallas_call(
-        functools.partial(_mxu_kernel, nk=gk),
-        grid=(gm, gn, gk),
+        functools.partial(_mxu_kernel, nk=geo.gk),
+        grid=(geo.gm, geo.gn, geo.gk),
         in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((geo.bm, geo.bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((geo.bk, geo.bn), lambda i, j, kk: (kk, j)),
         ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_specs=pl.BlockSpec((geo.bm, geo.bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((x.shape[0], w.shape[1]), jnp.float32),
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, w)
-    if pk:
-        out = out - jnp.float32(pk)  # remove the +1*+1 pad contributions
+    if geo.pk:
+        out = out - jnp.float32(geo.pk)  # remove the +1*+1 pad contributions
     return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# Dispatch: one entry point per GEMM flavor; the route and its block
+# parameters come from the tuning cache (repro.kernels.tune), so call
+# sites stop hardcoding 'vpu' vs 'mxu' vs fallback per shape.
+# ---------------------------------------------------------------------------
+def dispatch_binary_gemm(a: Array, b_packed: Array, k_true: int, *,
+                         route: str | None = None,
+                         interpret: bool | None = None, **params) -> Array:
+    """Packed-rhs binary GEMM with per-shape route selection.
+
+    a: (M, K) float activations or (M, KW) uint32 wire-format lhs;
+    b_packed: (N, KW) uint32 frozen weights. Returns (M, N) int32, the
+    exact sign-dot — every route computes identical integers (the float
+    and MXU routes sum ±1 products, which are exact in f32 for any
+    realistic K), so the route is invisible to callers.
+
+    route=None consults `tune.get_route('binary_gemm', ...)`; an explicit
+    route (+ block params) bypasses the cache — tests and the autotuner
+    use that to pin candidates.
+    """
+    packed_lhs = a.dtype == jnp.uint32
+    m = a.shape[0]
+    n, kw = b_packed.shape
+    if route is None:
+        from repro.kernels import tune
+        route, tuned = tune.get_route("binary_gemm", m=m, n=n, kw=kw)
+        params = {**tuned, **params}
+    if route == "vpu":
+        if packed_lhs:
+            return binary_gemm_vpu(a, b_packed, k_true, interpret=interpret,
+                                   **params)
+        return binary_gemm_vpu_packed(a, b_packed, k_true,
+                                      interpret=interpret, **params)
+    if route == "xla":
+        aw = a if packed_lhs else pack_bits(a)
+        return ref.binary_matmul_packed_ref(aw, b_packed, k_true)
+    if route == "float":
+        x = unpack_bits(a, k_true) if packed_lhs else ref.sign_pm1(a)
+        w = unpack_bits(b_packed, k_true)                    # (N, K) ±1
+        return jnp.matmul(x, w.T).astype(jnp.int32)
+    if route == "mxu":
+        x = unpack_bits(a, k_true) if packed_lhs else a
+        w = unpack_bits(b_packed, k_true)                    # (N, K) ±1
+        return binary_gemm_mxu(x, w.T, interpret=interpret,
+                               **params).astype(jnp.int32)
+    raise ValueError(f"unknown binary_gemm route: {route}")
+
+
+def dispatch_binary_gemm_fused(a: Array, b_packed: Array, thresh: Array,
+                               flip: Array, k_true: int, *,
+                               route: str | None = None,
+                               interpret: bool | None = None,
+                               **params) -> Array:
+    """Fused-epilogue binary GEMM (bit-resident chain step) with per-shape
+    route selection. Same contract as `binary_gemm_vpu_packed_io` —
+    returns (M, ceil(N/32)) uint32 wire-format words — with the route
+    ('vpu' Pallas kernel / 'xla' packed formulation / 'float' ±1 matmul
+    feeding the identical threshold+repack epilogue) resolved from the
+    tuning cache. All routes are bit-exact vs `ref.binary_matmul_fused_ref`.
+    """
+    packed_lhs = a.dtype == jnp.uint32
+    m = a.shape[0]
+    n, kw = b_packed.shape
+    if route is None:
+        from repro.kernels import tune
+        route, tuned = tune.get_route("binary_gemm_fused", m=m, n=n, kw=kw)
+        params = {**tuned, **params}
+    if route == "vpu":
+        return binary_gemm_vpu_packed_io(a, b_packed, thresh, flip, k_true,
+                                         interpret=interpret, **params)
+    if route == "xla":
+        aw = a if packed_lhs else pack_bits(a)
+        return ref.binary_matmul_fused_ref(aw, b_packed, thresh, flip, k_true)
+    if route == "float":
+        x = unpack_bits(a, k_true) if packed_lhs else ref.sign_pm1(a)
+        w = unpack_bits(b_packed, k_true)                    # (N, K) ±1
+        ints = jnp.matmul(x, w.T).astype(jnp.int32)
+        bits = (ints >= thresh[None, :]) != (flip[None, :] != 0)
+        return pack_bits(jnp.where(bits, 1.0, -1.0))
+    raise ValueError(f"unknown binary_gemm_fused route: {route}")

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel for decode attention over a bit-resident KV cache.
+"""Decode attention over a bit-resident KV cache: Pallas kernel + dispatch.
 
 The serving-path complement of `binary_gemm_vpu_packed_io`: after PRs 1-3
 froze weights and inter-layer activations to sign bits, the float KV cache
@@ -25,16 +25,25 @@ Float K/V are never materialized in HBM: HBM traffic per decode step drops
 from `2*B*T*Hkv*hd*itemsize` to `2*B*T*Hkv*ceil(hd/32)*4` bytes (~32x for
 fp32 caches at hd >= 32).
 
-Grid is (B, Hkv): each program owns one (batch row, kv head) and its full
-(T, hdw) K/V panels in VMEM — T-chunked online softmax is not needed at
-serving cache lengths (T*hdw words is ~1/32 the float cache a single fused
-attention row already streamed). GQA query heads for the kv head ride in
-the same block.
+Grid is (B/block_b, Hkv): each program owns `block_b` batch rows of one kv
+head and their full (T, hdw) K/V panels in VMEM. `block_b` is an autotuned
+knob (repro.kernels.tune) — one row per program maximizes grid parallelism,
+several rows per program amortize per-program overhead and keep the 8x128
+popcount lanes full when B is the only parallel axis that matters at
+serving shapes. T-chunked online softmax is not needed at serving cache
+lengths (T*hdw words is ~1/32 the float cache a single fused attention row
+already streamed). GQA query heads for the kv head ride in the same block.
 
-Semantics are defined by `repro.kernels.ref.decode_attention_packed_ref`;
-the kernel is asserted bit-exact against it (tests/test_decode_attention_
-packed.py), so the float op sequence here deliberately mirrors the oracle
-op for op.
+`decode_attention_packed` is the dispatching entry point: `route=None`
+consults the tuning cache, which may pick this Pallas kernel ('pallas',
+with a tuned `block_b`) or the XLA-lowered packed formulation ('xla', the
+oracle itself — on hosts where Pallas runs in interpret mode, letting XLA
+compile the popcount einsum is the fast packed path). Both routes are
+bit-exact by construction: semantics are defined by
+`repro.kernels.ref.decode_attention_packed_ref`, and the kernel is
+asserted bit-exact against it for every block_b the autotuner may pick
+(tests/test_decode_attention_packed.py), so the float op sequence here
+deliberately mirrors the oracle op for op.
 """
 from __future__ import annotations
 
@@ -45,7 +54,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.bitpack import pack_bits, unpack_bits
+from repro.kernels import ref
 from repro.kernels._compat import CompilerParams as _CompilerParams
+from repro.kernels._geometry import attn_geometry
 from repro.kernels.ref import NEG_INF
 
 Array = jax.Array
@@ -63,38 +74,39 @@ def v_cache_scale(v: Array) -> Array:
 
 def _decode_packed_kernel(len_ref, q_ref, k_ref, v_ref, s_ref, o_ref, *,
                           hd: int, hdw: int, window: int):
-    """One (batch row, kv head): q_ref (1,1,G,hdw) uint32, k_ref/v_ref
-    (1,1,T,hdw) uint32, len_ref (1,1) int32, s_ref (1,1) f32, o_ref
-    (1,1,G,hd) f32."""
-    qb = q_ref[0, 0]                                           # (G, hdw)
-    kb = k_ref[0, 0]                                           # (T, hdw)
-    t = kb.shape[0]
+    """`bb` batch rows of one kv head: q_ref (bb,1,G,hdw) uint32,
+    k_ref/v_ref (bb,1,T,hdw) uint32, len_ref (bb,1) int32, s_ref (bb,1)
+    f32, o_ref (bb,1,G,hd) f32."""
+    qb = q_ref[:, 0]                                           # (bb, G, hdw)
+    kb = k_ref[:, 0]                                           # (bb, T, hdw)
+    bb, t = kb.shape[0], kb.shape[1]
+    g = qb.shape[1]
 
     def body(w, acc):
-        x = jnp.bitwise_xor(qb[:, w][:, None], kb[:, w][None, :])
+        x = jnp.bitwise_xor(qb[:, :, w][:, :, None], kb[:, :, w][:, None, :])
         return acc + jax.lax.population_count(x).astype(jnp.int32)
 
-    acc = jax.lax.fori_loop(0, hdw, body,
-                            jnp.zeros((qb.shape[0], t), jnp.int32))
+    acc = jax.lax.fori_loop(0, hdw, body, jnp.zeros((bb, g, t), jnp.int32))
     dots = jnp.int32(hd) - 2 * acc                             # sign dot
     s = dots.astype(jnp.float32) * jnp.float32(1.0 / float(hd) ** 0.5)
-    pos = jax.lax.broadcasted_iota(jnp.int32, (1, t), 1)
-    length = len_ref[0, 0]
-    valid = pos < length
+    pos = jax.lax.broadcasted_iota(jnp.int32, (1, 1, t), 2)
+    length = len_ref[...][:, :, None]                          # (bb, 1, 1)
+    valid = pos < length                                       # (bb, 1, T)
     if window > 0:
         valid &= pos >= length - window
-    s = jnp.where(valid, s, NEG_INF)                           # (G, T)
+    s = jnp.where(valid, s, NEG_INF)                           # (bb, G, T)
     m = jnp.max(s, axis=-1, keepdims=True)
     e = jnp.exp(s - m)                                         # masked -> 0.0
-    l = jnp.sum(e, axis=-1, keepdims=True)                     # (G, 1)
-    sgn = unpack_bits(v_ref[0, 0], hd)                         # (T, hd) +-1
-    accv = jnp.sum(e[:, :, None] * sgn[None, :, :], axis=1)    # (G, hd)
-    o_ref[0, 0] = s_ref[0, 0] * (accv / l)
+    l = jnp.sum(e, axis=-1, keepdims=True)                     # (bb, G, 1)
+    sgn = unpack_bits(v_ref[:, 0], hd)                         # (bb, T, hd)
+    accv = jnp.sum(e[:, :, :, None] * sgn[:, None, :, :], axis=2)
+    o_ref[:, 0] = s_ref[...][:, :, None] * (accv / l)          # (bb, G, hd)
 
 
 def decode_attention_packed(q: Array, k_packed: Array, v_packed: Array,
                             v_scale: Array, cache_len: Array, *,
-                            window: int = 0,
+                            window: int = 0, block_b: int | None = None,
+                            route: str | None = None,
                             interpret: bool | None = None) -> Array:
     """Single-token decode attention against a bit-resident KV cache.
 
@@ -106,33 +118,63 @@ def decode_attention_packed(q: Array, k_packed: Array, v_packed: Array,
     written at cache_len-1. Masks positions >= cache_len and, when
     window > 0, positions < cache_len - window. Returns (B, 1, Hq, hd) in
     q.dtype, bit-exact with ref.decode_attention_packed_ref.
+
+    route=None consults the tuning cache ('pallas' with a tuned block_b,
+    or 'xla'); an explicit route (+ block_b) bypasses it — tests and the
+    autotuner pin candidates that way. Every route computes identical
+    bits, so dispatch can never change results, only microseconds.
     """
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
     b, t, hkv, hdw = k_packed.shape
     hd = q.shape[-1]
     g = q.shape[2] // hkv
+    if route is None:
+        from repro.kernels import tune
+        route, params = tune.get_route("decode_attention", b=b, t=t,
+                                       hkv=hkv, g=g, hd=hd)
+        if block_b is None:
+            block_b = params.get("block_b")
+    if route == "xla":
+        return ref.decode_attention_packed_ref(q, k_packed, v_packed,
+                                               v_scale, cache_len,
+                                               window=window)
+    if route != "pallas":
+        raise ValueError(f"unknown decode_attention route: {route}")
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+
     qb = pack_bits(q.reshape(b, hkv, g, hd))                   # (B,Hkv,G,hdw)
     kb = k_packed.transpose(0, 2, 1, 3)                        # (B,Hkv,T,hdw)
     vb = v_packed.transpose(0, 2, 1, 3)
     lens = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32).reshape(-1),
                             (b,)).reshape(b, 1)
+    vs = v_scale.astype(jnp.float32)
+
+    geo = attn_geometry(b, 1, block_b or 1, 1)
+    bb = geo.bb
+    if geo.pb:
+        row_pad = ((0, geo.pb),) + ((0, 0),) * 3
+        qb, kb, vb = (jnp.pad(x, row_pad) for x in (qb, kb, vb))
+        # pad rows get length 1 (not 0): a zero-length row would softmax an
+        # all-NEG_INF score vector into 0/0 NaNs inside the shared block;
+        # length 1 keeps the math finite and the rows are sliced off below.
+        lens = jnp.pad(lens, ((0, geo.pb), (0, 0)), constant_values=1)
+        vs = jnp.pad(vs, ((0, geo.pb), (0, 0)))
 
     out = pl.pallas_call(
         functools.partial(_decode_packed_kernel, hd=hd, hdw=hdw,
                           window=window),
-        grid=(b, hkv),
+        grid=(geo.gb, hkv),
         in_specs=[
-            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
-            pl.BlockSpec((1, 1, g, hdw), lambda i, j: (i, j, 0, 0)),
-            pl.BlockSpec((1, 1, t, hdw), lambda i, j: (i, j, 0, 0)),
-            pl.BlockSpec((1, 1, t, hdw), lambda i, j: (i, j, 0, 0)),
-            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((bb, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb, 1, g, hdw), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((bb, 1, t, hdw), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((bb, 1, t, hdw), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((bb, 1), lambda i, j: (i, j)),
         ],
-        out_specs=pl.BlockSpec((1, 1, g, hd), lambda i, j: (i, j, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, hkv, g, hd), jnp.float32),
+        out_specs=pl.BlockSpec((bb, 1, g, hd), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b + geo.pb, hkv, g, hd), jnp.float32),
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
-    )(lens, qb, kb, vb, v_scale.astype(jnp.float32))
-    return out.reshape(b, 1, hkv * g, hd).astype(q.dtype)
+    )(lens, qb, kb, vb, vs)
+    return out[:b].reshape(b, 1, hkv * g, hd).astype(q.dtype)

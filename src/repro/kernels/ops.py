@@ -22,7 +22,8 @@ from repro.core.packed import PackedActivation, PackedWeight
 from repro.kernels import ref
 from repro.kernels.binary_gemm import (
     binary_gemm_mxu, binary_gemm_vpu, binary_gemm_vpu_packed,
-    binary_gemm_vpu_packed_io,
+    binary_gemm_vpu_packed_io, dispatch_binary_gemm,
+    dispatch_binary_gemm_fused,
 )
 
 Array = jax.Array
@@ -86,14 +87,16 @@ def binary_matmul_mxu(x: Array, w: Array) -> Array:
 # inside the kernel. Inference-only — no custom_vjp, by design.
 # ---------------------------------------------------------------------------
 def packed_matmul(x: Array | PackedActivation, w: PackedWeight, *,
-                  path: str = "vpu") -> Array:
+                  path: str = "auto") -> Array:
     """sign(x) @ frozen-sign(w) from pre-packed weights.
 
     x: (..., K) float, or a PackedActivation already in the wire format
     (bit-resident chain: the lhs never re-packs); w: a PackedWeight whose
     wire matrix is (N, KW) — a dense weight, or a conv weight against
     im2col'd activations. Returns (..., N) int32 (exact popcount
-    arithmetic); callers cast.
+    arithmetic); callers cast. path='auto' (default) resolves the route
+    per shape from the tuning cache (kernels/tune.py); every route is
+    bit-exact, so callers never need to care.
     """
     assert w.packed.ndim == 2, w
     k = x.k if isinstance(x, PackedActivation) else x.shape[-1]
@@ -101,7 +104,9 @@ def packed_matmul(x: Array | PackedActivation, w: PackedWeight, *,
     if isinstance(x, PackedActivation):
         lead = x.packed.shape[:-1]
         a2 = x.packed.reshape(-1, x.packed.shape[-1])
-        if path == "vpu":
+        if path == "auto":
+            out = dispatch_binary_gemm(a2, w.packed, k)
+        elif path == "vpu":
             out = binary_gemm_vpu(a2, w.packed, k)
         elif path == "ref":
             out = ref.binary_matmul_packed_ref(a2, w.packed, k)
@@ -110,7 +115,9 @@ def packed_matmul(x: Array | PackedActivation, w: PackedWeight, *,
         return out.reshape(lead + (w.packed.shape[0],))
     lead = x.shape[:-1]
     x2 = x.reshape(-1, k)
-    if path == "vpu":
+    if path == "auto":
+        out = dispatch_binary_gemm(x2, w.packed, k)
+    elif path == "vpu":
         out = binary_gemm_vpu_packed(x2, w.packed, k)
     elif path == "ref":
         out = ref.binary_matmul_packed_ref(pack_bits(x2), w.packed, k)
@@ -122,7 +129,7 @@ def packed_matmul(x: Array | PackedActivation, w: PackedWeight, *,
 def packed_matmul_fused(x: Array | PackedActivation, w: PackedWeight, *,
                         thresh: Array | None = None,
                         flip: Array | None = None,
-                        path: str = "vpu") -> PackedActivation:
+                        path: str = "auto") -> PackedActivation:
     """One bit-resident chain step: popcount GEMM + fused epilogue.
 
     The layer's inference epilogue (BN / shift-BN / bias + sign) is a
@@ -149,7 +156,9 @@ def packed_matmul_fused(x: Array | PackedActivation, w: PackedWeight, *,
         assert x.shape[-1] == w.k, (x.shape, w.k)
         lead, dtype = x.shape[:-1], x.dtype
         a2 = x.reshape(-1, w.k)
-    if path == "vpu":
+    if path == "auto":
+        out = dispatch_binary_gemm_fused(a2, w.packed, thresh, flip, w.k)
+    elif path == "vpu":
         out = binary_gemm_vpu_packed_io(a2, w.packed, thresh, flip, w.k)
     elif path == "ref":
         if not isinstance(x, PackedActivation):
@@ -162,7 +171,7 @@ def packed_matmul_fused(x: Array | PackedActivation, w: PackedWeight, *,
                             dtype=dtype)
 
 
-def packed_conv2d(x: Array, w: PackedWeight, *, path: str = "vpu") -> Array:
+def packed_conv2d(x: Array, w: PackedWeight, *, path: str = "auto") -> Array:
     """Binary conv from a pre-packed im2col weight (SAME padding, stride 1).
 
     x: (B, H, W, Cin) float; w: conv PackedWeight frozen from a
@@ -189,7 +198,7 @@ def binary_conv2d(x: Array, w: Array | PackedWeight, *,
     Returns (B, H, W, Cout) float32 == conv(sign(x), sign(w)).
     """
     if isinstance(w, PackedWeight):
-        return packed_conv2d(x, w, path="ref" if path == "ref" else "vpu")
+        return packed_conv2d(x, w, path="ref" if path == "ref" else "auto")
     kh, kw, cin, cout = w.shape
     b, h, wd, _ = x.shape
     # sign-binarize BEFORE patch extraction so the implicit zero-padding of

@@ -1,5 +1,5 @@
-"""Pallas TPU kernel for chunked-prefill attention over a bit-resident KV
-cache.
+"""Chunked-prefill attention over a bit-resident KV cache: Pallas kernel
++ dispatch.
 
 The prefill-side complement of `decode_attention_packed`: PR 4 made every
 *decode* step read only uint32 sign bitplanes, but admission still ran a
@@ -22,15 +22,24 @@ cache, plus the chunk's own causal triangle — is exactly this kernel:
   * V accumulation: packed V unpacks to +-1 in VMEM only and accumulates
     under the softmax weights, scaled by the per-head fp `v_scale`.
 
-Grid is (B, Hkv, S/block_q): each program owns one (batch row, kv head,
-query sub-chunk) and streams the full (T, hdw) K/V panels through VMEM —
-T*hdw words is ~1/32 of the float K/V a flash-attention prefill of the
-same chunk would read. GQA query heads ride in the same block.
+Grid is (B/block_b, Hkv, S/block_q): each program owns `block_b` batch
+rows of one (kv head, query sub-chunk) and streams the full (T, hdw) K/V
+panels through VMEM — T*hdw words is ~1/32 of the float K/V a
+flash-attention prefill of the same chunk would read. Both block sizes are
+autotuned knobs (repro.kernels.tune): block_q trades triangle waste
+against per-program overhead, block_b amortizes that overhead across
+batch rows. GQA query heads ride in the same block.
 
-Semantics are defined by `repro.kernels.ref.prefill_attention_packed_ref`;
-the kernel is asserted bit-exact against it (tests/test_prefill_attention
-.py), so the float op sequence here deliberately mirrors the oracle op
-for op. With S == 1, q_pos == kv_len - 1 this degenerates to exactly
+`prefill_attention_packed` is the dispatching entry point: `route=None`
+consults the tuning cache, which may pick this Pallas kernel ('pallas',
+with tuned block_q/block_b) or the XLA-lowered packed formulation ('xla',
+the oracle itself — the fast packed path on hosts where Pallas runs in
+interpret mode). Semantics are defined by
+`repro.kernels.ref.prefill_attention_packed_ref`; the kernel is asserted
+bit-exact against it for every (block_q, block_b) the autotuner may pick
+(tests/test_prefill_attention.py), so the float op sequence here
+deliberately mirrors the oracle op for op. With S == 1,
+q_pos == kv_len - 1 this degenerates to exactly
 `decode_attention_packed` (asserted too).
 """
 from __future__ import annotations
@@ -42,7 +51,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.bitpack import pack_bits, unpack_bits
+from repro.kernels import ref
 from repro.kernels._compat import CompilerParams as _CompilerParams
+from repro.kernels._geometry import attn_geometry
 from repro.kernels.ref import NEG_INF
 
 Array = jax.Array
@@ -51,43 +62,46 @@ Array = jax.Array
 def _prefill_packed_kernel(len_ref, qpos_ref, q_ref, k_ref, v_ref, s_ref,
                            o_ref, *, hd: int, hdw: int, bq: int, window: int,
                            causal: bool):
-    """One (batch row, kv head, q sub-chunk): q_ref (1,1,bq,G,hdw) uint32,
-    k_ref/v_ref (1,1,T,hdw) uint32, len_ref/qpos_ref (1,1) int32, s_ref
-    (1,1) f32, o_ref (1,1,bq,G,hd) f32."""
-    qb = q_ref[0, 0]                                           # (bq, G, hdw)
-    kb = k_ref[0, 0]                                           # (T, hdw)
-    t = kb.shape[0]
-    g = qb.shape[1]
+    """`bb` batch rows of one (kv head, q sub-chunk): q_ref (bb,1,bq,G,hdw)
+    uint32, k_ref/v_ref (bb,1,T,hdw) uint32, len_ref/qpos_ref (bb,1) int32,
+    s_ref (bb,1) f32, o_ref (bb,1,bq,G,hd) f32."""
+    qb = q_ref[:, 0]                                           # (bb,bq,G,hdw)
+    kb = k_ref[:, 0]                                           # (bb, T, hdw)
+    bb, t = kb.shape[0], kb.shape[1]
+    g = qb.shape[2]
 
     def body(w, acc):
-        x = jnp.bitwise_xor(qb[:, :, w][:, :, None], kb[:, w][None, None, :])
+        x = jnp.bitwise_xor(qb[:, :, :, w][:, :, :, None],
+                            kb[:, :, w][:, None, None, :])
         return acc + jax.lax.population_count(x).astype(jnp.int32)
 
     acc = jax.lax.fori_loop(0, hdw, body,
-                            jnp.zeros((bq, g, t), jnp.int32))
+                            jnp.zeros((bb, bq, g, t), jnp.int32))
     dots = jnp.int32(hd) - 2 * acc                             # sign dot
     s = dots.astype(jnp.float32) * jnp.float32(1.0 / float(hd) ** 0.5)
-    kpos = jax.lax.broadcasted_iota(jnp.int32, (1, 1, t), 2)
-    qp = qpos_ref[0, 0] + pl.program_id(2) * bq + \
-        jax.lax.broadcasted_iota(jnp.int32, (bq, 1, 1), 0)
-    valid = kpos < len_ref[0, 0]
+    kpos = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, t), 3)
+    qp = qpos_ref[...][:, :, None, None] + pl.program_id(2) * bq + \
+        jax.lax.broadcasted_iota(jnp.int32, (1, bq, 1, 1), 1)  # (bb,bq,1,1)
+    valid = kpos < len_ref[...][:, :, None, None]              # (bb,1,1,T)
     if causal:
         valid &= kpos <= qp
     if window > 0:
         valid &= kpos > qp - window
-    s = jnp.where(valid, s, NEG_INF)                           # (bq, G, T)
+    s = jnp.where(valid, s, NEG_INF)                           # (bb,bq,G,T)
     m = jnp.max(s, axis=-1, keepdims=True)
     e = jnp.exp(s - m)                                         # masked -> 0.0
-    l = jnp.sum(e, axis=-1, keepdims=True)                     # (bq, G, 1)
-    sgn = unpack_bits(v_ref[0, 0], hd)                         # (T, hd) +-1
-    accv = jnp.sum(e[:, :, :, None] * sgn[None, None, :, :], axis=2)
-    o_ref[0, 0] = s_ref[0, 0] * (accv / l)
+    l = jnp.sum(e, axis=-1, keepdims=True)                     # (bb,bq,G,1)
+    sgn = unpack_bits(v_ref[:, 0], hd)                         # (bb, T, hd)
+    accv = jnp.sum(e[:, :, :, :, None] * sgn[:, None, None, :, :], axis=3)
+    o_ref[:, 0] = s_ref[...][:, :, None, None] * (accv / l)    # (bb,bq,G,hd)
 
 
 def prefill_attention_packed(q: Array, k_packed: Array, v_packed: Array,
                              v_scale: Array, kv_len: Array, q_pos: Array, *,
                              window: int = 0, causal: bool = True,
-                             block_q: int = 8,
+                             block_q: int | None = None,
+                             block_b: int | None = None,
+                             route: str | None = None,
                              interpret: bool | None = None) -> Array:
     """Chunked-prefill attention against a bit-resident KV cache.
 
@@ -99,20 +113,40 @@ def prefill_attention_packed(q: Array, k_packed: Array, v_packed: Array,
     global position of q[:, 0]. Masks positions >= kv_len, the causal
     triangle t > q_pos + i (when `causal`), and, when window > 0,
     positions <= q_pos + i - window. Query rows are processed in
-    `block_q`-row sub-chunks (S is padded up; pad rows are discarded).
-    Returns (B, S, Hq, hd) in q.dtype, bit-exact with
-    ref.prefill_attention_packed_ref.
+    `block_q`-row sub-chunks and batch rows in `block_b`-row tiles (both
+    padded up; pad rows are discarded). Returns (B, S, Hq, hd) in
+    q.dtype, bit-exact with ref.prefill_attention_packed_ref.
+
+    route=None consults the tuning cache ('pallas' with tuned
+    block_q/block_b, or 'xla'); an explicit route bypasses it. Every
+    route computes identical bits.
     """
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
     b, t, hkv, hdw = k_packed.shape
     s = q.shape[1]
     hd = q.shape[-1]
     g = q.shape[2] // hkv
-    bq = min(block_q, s)
-    s_pad = -(-s // bq) * bq
-    if s_pad != s:
-        q = jnp.pad(q, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+    if route is None:
+        from repro.kernels import tune
+        route, params = tune.get_route("prefill_attention", b=b, s=s, t=t,
+                                       hkv=hkv, g=g, hd=hd)
+        if block_q is None:
+            block_q = params.get("block_q")
+        if block_b is None:
+            block_b = params.get("block_b")
+    if route == "xla":
+        return ref.prefill_attention_packed_ref(q, k_packed, v_packed,
+                                                v_scale, kv_len, q_pos,
+                                                window=window, causal=causal)
+    if route != "pallas":
+        raise ValueError(f"unknown prefill_attention route: {route}")
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+
+    geo = attn_geometry(b, s, block_b or 1, block_q or 8)
+    bb, bq = geo.bb, geo.bq
+    if geo.ps:
+        q = jnp.pad(q, ((0, 0), (0, geo.ps), (0, 0), (0, 0)))
+    s_pad = s + geo.ps
     # (B, S, Hq, hd) -> (B, Hkv, S, G, hdw): head h = kv_head * G + g
     qb = pack_bits(q.reshape(b, s_pad, hkv, g, hd).transpose(0, 2, 1, 3, 4))
     kb = k_packed.transpose(0, 2, 1, 3)                        # (B,Hkv,T,hdw)
@@ -121,25 +155,36 @@ def prefill_attention_packed(q: Array, k_packed: Array, v_packed: Array,
                             (b,)).reshape(b, 1)
     qpos = jnp.broadcast_to(jnp.asarray(q_pos, jnp.int32).reshape(-1),
                             (b,)).reshape(b, 1)
+    vs = v_scale.astype(jnp.float32)
+    if geo.pb:
+        qb = jnp.pad(qb, ((0, geo.pb),) + ((0, 0),) * 4)
+        row_pad = ((0, geo.pb),) + ((0, 0),) * 3
+        kb, vb = jnp.pad(kb, row_pad), jnp.pad(vb, row_pad)
+        # pad rows get kv_len 1 / q_pos 0 — finite math, sliced off below
+        lens = jnp.pad(lens, ((0, geo.pb), (0, 0)), constant_values=1)
+        qpos = jnp.pad(qpos, ((0, geo.pb), (0, 0)))
+        vs = jnp.pad(vs, ((0, geo.pb), (0, 0)))
 
     out = pl.pallas_call(
         functools.partial(_prefill_packed_kernel, hd=hd, hdw=hdw, bq=bq,
                           window=window, causal=causal),
-        grid=(b, hkv, s_pad // bq),
+        grid=(geo.gb, hkv, geo.gs),
         in_specs=[
-            pl.BlockSpec((1, 1), lambda i, j, k: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i, j, k: (i, 0)),
-            pl.BlockSpec((1, 1, bq, g, hdw), lambda i, j, k: (i, j, k, 0, 0)),
-            pl.BlockSpec((1, 1, t, hdw), lambda i, j, k: (i, j, 0, 0)),
-            pl.BlockSpec((1, 1, t, hdw), lambda i, j, k: (i, j, 0, 0)),
-            pl.BlockSpec((1, 1), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bb, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((bb, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((bb, 1, bq, g, hdw),
+                         lambda i, j, k: (i, j, k, 0, 0)),
+            pl.BlockSpec((bb, 1, t, hdw), lambda i, j, k: (i, j, 0, 0)),
+            pl.BlockSpec((bb, 1, t, hdw), lambda i, j, k: (i, j, 0, 0)),
+            pl.BlockSpec((bb, 1), lambda i, j, k: (i, j)),
         ],
-        out_specs=pl.BlockSpec((1, 1, bq, g, hd),
+        out_specs=pl.BlockSpec((bb, 1, bq, g, hd),
                                lambda i, j, k: (i, j, k, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, hkv, s_pad, g, hd), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((b + geo.pb, hkv, s_pad, g, hd),
+                                       jnp.float32),
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel")),
         interpret=interpret,
-    )(lens, qpos, qb, kb, vb, v_scale.astype(jnp.float32))
-    out = out.transpose(0, 2, 1, 3, 4).reshape(b, s_pad, hkv * g, hd)
+    )(lens, qpos, qb, kb, vb, vs)
+    out = out[:b].transpose(0, 2, 1, 3, 4).reshape(b, s_pad, hkv * g, hd)
     return out[:, :s].astype(q.dtype)

@@ -83,6 +83,9 @@ def main() -> None:
               f"packed bitplanes (kv_bits={eng.cfg.kv_bits}) + "
               f"{cb['float']/1e6:.3f} MB float (fp K/V, V scales, recurrent "
               f"state)")
+        for name, (route, params) in eng.kernel_routes().items():
+            extra = f" {params}" if params else ""
+            print(f"kernel route {name}: {route}{extra}")
     rng = np.random.default_rng(args.seed)
 
     if args.queue:

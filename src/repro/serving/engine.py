@@ -140,6 +140,34 @@ class ServingEngine:
         out["total"] = out["packed"] + out["float"]
         return out
 
+    def kernel_routes(self) -> dict:
+        """Resolved kernel routes (repro.kernels.tune) for this engine's
+        characteristic shapes: which realization each packed kernel will
+        actually run at serving time — 'vpu'/'mxu'/'xla'/'float' for the
+        binary GEMMs, 'pallas'/'xla' for the packed attention. Pure
+        lookup (cache hit or heuristic); diagnostic only — dispatch
+        happens inside the jitted step functions from the same cache, so
+        this is exactly what they resolved at trace time."""
+        from repro.core.bitpack import packed_width
+        from repro.kernels import tune
+        cfg, m, out = self.cfg, self.slots, {}
+        for k, n in [(cfg.d_model, cfg.d_model), (cfg.d_model, cfg.d_ff),
+                     (cfg.d_ff, cfg.d_model)]:
+            if k and n:
+                out[f"binary_gemm_fused[{m}x{k}->{n}]"] = tune.get_route(
+                    "binary_gemm_fused", m=m, n=n, kw=packed_width(k))
+        if cfg.n_kv_heads:
+            g = max(1, cfg.n_heads // cfg.n_kv_heads)
+            out[f"decode_attention[b{m}_t{self.max_len}]"] = tune.get_route(
+                "decode_attention", b=m, t=self.max_len, hkv=cfg.n_kv_heads,
+                g=g, hd=cfg.head_dim)
+            if self.prefill_chunk:
+                out[f"prefill_attention[b{m}_s{self.prefill_chunk}"
+                    f"_t{self.max_len}]"] = tune.get_route(
+                    "prefill_attention", b=m, s=self.prefill_chunk,
+                    t=self.max_len, hkv=cfg.n_kv_heads, g=g, hd=cfg.head_dim)
+        return out
+
     def _next_key(self):
         self._key, sub = jax.random.split(self._key)
         return sub

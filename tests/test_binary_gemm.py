@@ -38,15 +38,60 @@ def test_binary_matmul_matches_oracle(m, k, n, path, dtype):
     np.testing.assert_array_equal(want, got)
 
 
-@pytest.mark.parametrize("bm,bn,bk", [(8, 128, 1), (32, 32, 4), (128, 128, 8)])
-def test_vpu_block_shape_sweep(bm, bn, bk):
+@pytest.mark.parametrize("bm,bn,bk,uk", [
+    (8, 128, 1, 1), (32, 32, 4, 2), (128, 128, 8, 1),
+    (64, 64, 8, 0),        # whole-tile broadcast popcount
+    (16, 128, 6, 4),       # uk not dividing bk: clamped to a divisor
+])
+def test_vpu_block_shape_sweep(bm, bn, bk, uk):
     key = jax.random.PRNGKey(7)
     x = jax.random.normal(key, (100, 300))
     w = jax.random.normal(jax.random.fold_in(key, 1), (300, 70))
     want = np.asarray(ref.binary_matmul_ref(x, w), np.int32)
     a_p, b_p, kk = ref.pack_operands(x, w)
-    got = np.asarray(binary_gemm_vpu(a_p, b_p, kk, bm=bm, bn=bn, bk=bk))
+    got = np.asarray(binary_gemm_vpu(a_p, b_p, kk, bm=bm, bn=bn, bk=bk,
+                                     uk=uk))
     np.testing.assert_array_equal(want, got)
+
+
+@pytest.mark.parametrize("m,k,n", [(17, 100, 33), (8, 32, 16), (5, 130, 70)])
+def test_all_tuner_candidates_bit_exact(m, k, n):
+    """Every (route, tile) candidate the autotuner may ever pick for the
+    packed GEMMs (tune.candidates) is bit-exact vs the oracles — for both
+    the packed-lhs and the float-lhs (chain entry) operand forms, across
+    ragged M/N and K not a multiple of 32."""
+    from repro.kernels import tune
+    from repro.kernels.binary_gemm import (
+        dispatch_binary_gemm, dispatch_binary_gemm_fused,
+    )
+    key = jax.random.PRNGKey(m + k + n)
+    kx, kw_ = jax.random.split(key)
+    x = jax.random.normal(kx, (m, k))
+    w = jax.random.normal(kw_, (k, n))
+    a_p, b_p, kk = ref.pack_operands(x, w)
+    shape = dict(m=m, n=n, kw=a_p.shape[1])
+
+    want = np.asarray(ref.binary_matmul_packed_ref(a_p, b_p, kk))
+    cands = tune.candidates("binary_gemm", shape)
+    assert {r for r, _ in cands} == {"xla", "float", "mxu", "vpu"}
+    for route, params in cands:
+        for lhs in (a_p, x):
+            got = np.asarray(dispatch_binary_gemm(lhs, b_p, kk, route=route,
+                                                  **params))
+            np.testing.assert_array_equal(
+                want, got, err_msg=f"{route} {params} lhs={lhs.dtype}")
+
+    th = jax.random.randint(jax.random.fold_in(key, 2), (n,), -5, 5)
+    fl = jax.random.randint(jax.random.fold_in(key, 3), (n,), 0, 2)
+    want_f = np.asarray(ref.binary_matmul_fused_ref(a_p, b_p, th, fl, kk))
+    cands = tune.candidates("binary_gemm_fused", shape)
+    assert {r for r, _ in cands} == {"xla", "float", "vpu"}
+    for route, params in cands:
+        for lhs in (a_p, x):
+            got = np.asarray(dispatch_binary_gemm_fused(
+                lhs, b_p, th, fl, kk, route=route, **params))
+            np.testing.assert_array_equal(
+                want_f, got, err_msg=f"fused {route} {params}")
 
 
 def test_mxu_block_shape_sweep():

@@ -60,6 +60,34 @@ def test_kernel_matches_oracle_bit_exact(b, t, hq, hkv, hd, window, ragged):
 
 
 @pytest.mark.kernels
+@pytest.mark.parametrize("b,t,hq,hkv,hd,window", [
+    (3, 21, 4, 2, 48, 5),      # block_b doesn't divide B
+    (8, 40, 8, 2, 33, 0),      # odd hd tail bits, every block_b candidate
+    (2, 17, 6, 3, 20, 3),      # GQA 2:1 + window + odd hd
+])
+def test_all_tuner_candidates_bit_exact(b, t, hq, hkv, hd, window):
+    """Every (route, block_b) candidate the autotuner may ever pick for
+    this kernel (tune.candidates) is bit-exact vs the oracle — plus
+    clamped/non-dividing block_b values beyond the lattice."""
+    from repro.kernels import tune
+    q, _, _, kp, vp, vs, lk = _case(b * 11 + t + hd, b, t, hq, hkv, hd)
+    lens = jax.random.randint(lk, (b,), 1, t + 1)
+    want = np.asarray(ref.decode_attention_packed_ref(
+        q, kp, vp, vs, lens, window=window))
+    cands = tune.candidates(
+        "decode_attention", dict(b=b, t=t, hkv=hkv, g=hq // hkv, hd=hd))
+    assert {r for r, _ in cands} == {"xla", "pallas"}
+    for route, params in cands:
+        got = np.asarray(decode_attention_packed(
+            q, kp, vp, vs, lens, window=window, route=route, **params))
+        np.testing.assert_array_equal(want, got, err_msg=f"{route} {params}")
+    for bb in (3, 16):         # clamp + pad paths outside the lattice
+        got = np.asarray(decode_attention_packed(
+            q, kp, vp, vs, lens, window=window, route="pallas", block_b=bb))
+        np.testing.assert_array_equal(want, got, err_msg=f"block_b={bb}")
+
+
+@pytest.mark.kernels
 def test_kernel_matches_oracle_under_jit():
     """The serving path calls the kernel inside jit'd decode with traced
     (B,) lengths — same bit-exact contract there."""

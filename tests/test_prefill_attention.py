@@ -54,9 +54,9 @@ def test_kernel_matches_oracle_bit_exact(b, s, t, hq, hkv, hd, window,
 
 @pytest.mark.kernels
 def test_query_block_boundaries():
-    """The q-chunk grid axis is an implementation detail: any block_q
-    (dividing S or not — the tail is padded and discarded) must give the
-    identical result."""
+    """The (q-chunk, batch-row) grid axes are implementation details: any
+    (block_q, block_b) — dividing S/B or not, the tails are padded and
+    discarded — must give the identical result."""
     b, s, t, hq, hkv, hd = 2, 10, 30, 4, 2, 48
     q, kp, vp, vs, lk = _case(5, b, s, t, hq, hkv, hd)
     lens = jax.random.randint(lk, (b,), s, t + 1)
@@ -64,9 +64,39 @@ def test_query_block_boundaries():
     want = np.asarray(ref.prefill_attention_packed_ref(
         q, kp, vp, vs, lens, qpos, window=4))
     for bq in (1, 3, 8, 16):
+        for bb in (1, 2, 5):
+            got = np.asarray(prefill_attention_packed(
+                q, kp, vp, vs, lens, qpos, window=4, route="pallas",
+                block_q=bq, block_b=bb))
+            np.testing.assert_array_equal(want, got)
+
+
+@pytest.mark.kernels
+@pytest.mark.parametrize("b,s,t,hq,hkv,hd,window,causal", [
+    (3, 7, 40, 4, 2, 48, 0, True),     # ragged B vs block_b, GQA
+    (2, 5, 33, 6, 3, 33, 7, True),     # odd everything + window
+    (1, 4, 16, 4, 4, 20, 0, False),    # non-causal, odd hd tail bits
+])
+def test_all_tuner_candidates_bit_exact(b, s, t, hq, hkv, hd, window,
+                                        causal):
+    """Every (route, block) candidate the autotuner may ever pick for this
+    kernel (tune.candidates) is bit-exact vs the oracle — the dispatch
+    layer must be free to choose any of them on pure timing."""
+    from repro.kernels import tune
+    q, kp, vp, vs, lk = _case(b * 19 + s + t, b, s, t, hq, hkv, hd)
+    lens = jax.random.randint(lk, (b,), s, t + 1)
+    qpos = lens - s
+    want = np.asarray(ref.prefill_attention_packed_ref(
+        q, kp, vp, vs, lens, qpos, window=window, causal=causal))
+    cands = tune.candidates(
+        "prefill_attention",
+        dict(b=b, s=s, t=t, hkv=hkv, g=hq // hkv, hd=hd))
+    assert {r for r, _ in cands} == {"xla", "pallas"}
+    for route, params in cands:
         got = np.asarray(prefill_attention_packed(
-            q, kp, vp, vs, lens, qpos, window=4, block_q=bq))
-        np.testing.assert_array_equal(want, got)
+            q, kp, vp, vs, lens, qpos, window=window, causal=causal,
+            route=route, **params))
+        np.testing.assert_array_equal(want, got, err_msg=f"{route} {params}")
 
 
 @pytest.mark.kernels

@@ -1,0 +1,183 @@
+"""Autotuner + dispatch layer: shape bucketing, the committed per-backend
+route cache, heuristic fallback on a miss, and — the dispatch contract —
+that every dispatching entry point actually runs the route the cache
+resolved for its shape. Bit-exactness of every candidate the tuner may
+pick is covered by the per-kernel candidate-lattice tests
+(test_binary_gemm / test_decode_attention_packed / test_prefill_attention);
+this file tests the *selection* machinery around them."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.smoke import smoke_config
+from repro.kernels import ref, tune
+from repro.kernels._geometry import (
+    attn_geometry, fused_gemm_geometry, gemm_geometry,
+)
+from repro.kernels.binary_gemm import dispatch_binary_gemm
+from repro.models.api import get_model
+from repro.serving.engine import ServingEngine
+
+pytestmark = pytest.mark.kernels
+
+
+# ---------------------------------------------------------------------------
+# Bucketing + cache
+# ---------------------------------------------------------------------------
+def test_bucket_rounds_size_dims_up_to_pow2_only():
+    b = tune.bucket(dict(m=5, n=100, kw=3, hkv=3, g=6, hd=33))
+    assert b == dict(m=8, n=128, kw=4, hkv=3, g=6, hd=33)
+    # pow2 inputs are fixed points: one cache entry per pow2 bucket
+    assert tune.bucket(b) == b
+    assert tune.bucket_key(dict(m=5, n=100, kw=3)) == \
+        tune.bucket_key(dict(m=8, n=128, kw=4))
+
+
+def test_committed_cache_covers_standard_shapes():
+    """The repo commits a tuned cache for the CI backend; a gap here is
+    exactly what `python -m repro.kernels.tune --check` gates in CI."""
+    assert tune.main(["--check"]) == 0
+
+
+def test_get_route_returns_cache_entry_for_standard_shapes():
+    cache = tune.load_cache()
+    for kernel, shapes in tune.STANDARD_SHAPES.items():
+        for shape in shapes:
+            entry = cache[kernel][tune.bucket_key(shape)]
+            route, params = tune.get_route(kernel, **shape)
+            assert (route, params) == (entry["route"], entry["params"])
+            # any shape in the same bucket resolves identically
+            nudged = {k: max(1, v - 1) for k, v in shape.items()}
+            if tune.bucket_key(nudged) == tune.bucket_key(shape):
+                assert tune.get_route(kernel, **nudged) == (route, params)
+
+
+def test_cache_miss_falls_back_to_heuristic_and_records_miss():
+    tune.misses.clear()
+    odd = dict(m=1 << 12, n=1 << 13, kw=1 << 9)    # not a standard bucket
+    assert tune.bucket_key(odd) not in tune.load_cache().get(
+        "binary_gemm", {})
+    route, params = tune.get_route("binary_gemm", **odd)
+    assert (route, params) == tune._heuristic("binary_gemm", odd)
+    assert ("binary_gemm", tune.bucket_key(odd)) in tune.misses
+
+
+def test_tuned_entries_carry_timings_and_roofline():
+    """Tuned entries must record the full candidate timing table (so a
+    human can audit the pick) and, where the HLO cost model parses, the
+    winner's roofline placement."""
+    cache = tune.load_cache()
+    entries = [e for k, v in cache.items() if k != "_meta"
+               for e in v.values()]
+    assert entries
+    for e in entries:
+        assert e["route"] and e["us"] > 0
+        assert len(e["timings"]) >= 2      # it really compared candidates
+    # integer popcount kernels count zero flops in the HLO cost model, so
+    # the meaningful roofline coordinate here is bytes (they sit hard
+    # against the memory bound); ai can legitimately be 0.0
+    assert any((e.get("roofline") or {}).get("hbm_bytes", 0) > 0
+               for e in entries)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch consults the cache
+# ---------------------------------------------------------------------------
+def test_dispatch_runs_the_cached_route(monkeypatch):
+    """dispatch_binary_gemm with route=None must resolve via
+    tune.get_route and execute exactly that route — spied end to end."""
+    calls = []
+    real = tune.get_route
+
+    def spy(kernel, **shape):
+        out = real(kernel, **shape)
+        calls.append((kernel, shape, out))
+        return out
+
+    monkeypatch.setattr(tune, "get_route", spy)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (17, 100))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (100, 33))
+    a_p, b_p, k = ref.pack_operands(x, w)
+    got = np.asarray(dispatch_binary_gemm(a_p, b_p, k))
+    np.testing.assert_array_equal(
+        got, np.asarray(ref.binary_matmul_packed_ref(a_p, b_p, k)))
+    (kernel, shape, (route, params)), = calls
+    assert kernel == "binary_gemm"
+    assert shape == dict(m=17, n=33, kw=a_p.shape[1])
+    entry = tune.load_cache().get(kernel, {}).get(tune.bucket_key(shape))
+    if entry is not None:
+        assert (route, params) == (entry["route"], entry["params"])
+    else:
+        assert (route, params) == tune._heuristic(kernel, shape)
+
+
+def test_explicit_route_bypasses_cache(monkeypatch):
+    monkeypatch.setattr(tune, "get_route",
+                        lambda *a, **k: pytest.fail("cache consulted"))
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (5, 64))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (64, 9))
+    a_p, b_p, k = ref.pack_operands(x, w)
+    got = np.asarray(dispatch_binary_gemm(a_p, b_p, k, route="xla"))
+    np.testing.assert_array_equal(
+        got, np.asarray(ref.binary_matmul_packed_ref(a_p, b_p, k)))
+    with pytest.raises(ValueError, match="route"):
+        dispatch_binary_gemm(a_p, b_p, k, route="gpu")
+
+
+def test_engine_kernel_routes_match_cache():
+    """ServingEngine.kernel_routes() reports, for the engine's own shapes,
+    exactly what tune.get_route resolves — the engine no longer hardcodes
+    a kernel path anywhere."""
+    cfg = smoke_config("qwen2-72b")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, max_len=16, freeze=True, kv_bits=1,
+                        slots=2)
+    routes = eng.kernel_routes()
+    assert any(k.startswith("binary_gemm_fused") for k in routes)
+    assert any(k.startswith("decode_attention") for k in routes)
+    g = max(1, cfg.n_heads // cfg.n_kv_heads)
+    want = tune.get_route("decode_attention", b=2, t=16,
+                          hkv=cfg.n_kv_heads, g=g, hd=cfg.head_dim)
+    assert routes["decode_attention[b2_t16]"] == want
+    for route, params in routes.values():
+        assert route in ("vpu", "mxu", "xla", "float", "pallas")
+
+
+# ---------------------------------------------------------------------------
+# Geometry helpers (the shared clamp/pad rules the kernels consume)
+# ---------------------------------------------------------------------------
+def test_gemm_geometry_clamps_pads_and_caches():
+    g = gemm_geometry(17, 33, 4, 128, 128, 8, uk=1)
+    assert (g.bm, g.bn, g.bk) == (17, 33, 4)       # clamped to the operand
+    assert (g.pm, g.pn, g.pk) == (0, 0, 0)
+    assert (g.gm, g.gn, g.gk) == (1, 1, 1)
+    g2 = gemm_geometry(100, 70, 10, 32, 32, 4, uk=8)
+    assert g2.pm == 28 and g2.pn == 26 and g2.pk == 2
+    assert g2.gm * g2.bm == 128 and g2.gn * g2.bn == 96
+    assert g2.gk * g2.bk == 12
+    assert g2.uk == 4 and g2.bk % g2.uk == 0       # uk clamped to divide bk
+    assert gemm_geometry(6, 8, 3, 16, 16, 8, uk=5).bk % \
+        gemm_geometry(6, 8, 3, 16, 16, 8, uk=5).uk == 0
+    # memoized: identical args -> identical object
+    assert gemm_geometry(17, 33, 4, 128, 128, 8, uk=1) is g
+
+
+def test_fused_geometry_keeps_bn_word_aligned():
+    g = fused_gemm_geometry(9, 70, 128, 256)
+    assert g.bn % 32 == 0 and g.bn >= 70
+    assert (g.pm, g.gm) == (0, 1)
+    with pytest.raises(AssertionError, match="multiple"):
+        fused_gemm_geometry(9, 70, 128, 100)
+
+
+def test_attn_geometry_clamps_both_axes():
+    g = attn_geometry(3, 10, 8, 4)
+    assert g.bb == 3 and g.bq == 4
+    assert g.pb == 0 and g.ps == 2
+    assert g.gb == 1 and g.gs == 3
+    g2 = attn_geometry(5, 1, 2, 1)                 # decode: s == 1
+    assert g2.bb == 2 and g2.pb == 1 and g2.gb == 3
