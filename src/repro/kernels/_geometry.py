@@ -51,14 +51,23 @@ def gemm_geometry(m: int, n: int, kw: int, bm: int, bn: int, bk: int,
 
 
 @functools.lru_cache(maxsize=None)
-def fused_gemm_geometry(m: int, n: int, bm: int, bn: int) -> GemmGeometry:
-    """Geometry for binary_gemm_vpu_packed_io: K stays whole per block,
-    bn is clamped to a multiple of 32 (the N-axis repack width)."""
+def fused_gemm_geometry(m: int, n: int, kw: int, bm: int, bn: int,
+                        uk: int = 0) -> GemmGeometry:
+    """Geometry for binary_gemm_vpu_packed_io: K stays whole per block
+    (bk == kw), bn is clamped to a multiple of 32 (the N-axis repack
+    width), and `uk` is clamped to a divisor of kw — the fused kernel's
+    inner fori_loop runs kw//uk steps, so a non-divisor uk would silently
+    drop the kw%uk trailing words (same rule gemm_geometry applies to
+    uk vs bk)."""
     assert bn % WORD == 0, f"bn must be a multiple of {WORD} (N repack): {bn}"
     bm = min(bm, m)
     bn = min(bn, ((n + WORD - 1) // WORD) * WORD)
+    uk = min(uk, kw) if uk > 0 else 0
+    if uk > 0:
+        while kw % uk:           # uk must tile the whole-K block exactly
+            uk -= 1
     pm, pn = (-m) % bm, (-n) % bn
-    return GemmGeometry(bm, bn, 0, 0, pm, pn, 0,
+    return GemmGeometry(bm, bn, kw, uk, pm, pn, 0,
                         (m + pm) // bm, (n + pn) // bn, 1)
 
 

@@ -266,7 +266,7 @@ def binary_gemm_vpu_packed_io(a: Array, b_packed: Array, thresh: Array,
         if kw * WORD - k_true:
             a = jnp.pad(a, ((0, 0), (0, kw * WORD - k_true)),
                         constant_values=1.0)
-    geo = fused_gemm_geometry(m, n, bm, bn)
+    geo = fused_gemm_geometry(m, n, kw, bm, bn, uk)
     if geo.pm:
         a = jnp.pad(a, ((0, geo.pm), (0, 0)),
                     constant_values=0 if packed_lhs else -1.0)
@@ -281,7 +281,7 @@ def binary_gemm_vpu_packed_io(a: Array, b_packed: Array, thresh: Array,
 
     out = pl.pallas_call(
         functools.partial(_fused_epilogue_kernel, k_true=k_true,
-                          packed_lhs=packed_lhs, uk=min(uk, kw)),
+                          packed_lhs=packed_lhs, uk=geo.uk),
         grid=(geo.gm, geo.gn),
         in_specs=[
             pl.BlockSpec((bm, kw if packed_lhs else kw * WORD),
@@ -377,7 +377,11 @@ def dispatch_binary_gemm(a: Array, b_packed: Array, k_true: int, *,
     n, kw = b_packed.shape
     if route is None:
         from repro.kernels import tune
-        route, tuned = tune.get_route("binary_gemm", m=m, n=n, kw=kw)
+        # pl keys the cache on the lhs form: packed lhs runs binary_gemm_vpu
+        # while float lhs runs the in-kernel-pack binary_gemm_vpu_packed —
+        # different kernels, so they are tuned (and cached) separately.
+        route, tuned = tune.get_route("binary_gemm", m=m, n=n, kw=kw,
+                                      pl=int(packed_lhs))
         params = {**tuned, **params}
     if route == "vpu":
         if packed_lhs:
@@ -417,7 +421,8 @@ def dispatch_binary_gemm_fused(a: Array, b_packed: Array, thresh: Array,
     n, kw = b_packed.shape
     if route is None:
         from repro.kernels import tune
-        route, tuned = tune.get_route("binary_gemm_fused", m=m, n=n, kw=kw)
+        route, tuned = tune.get_route("binary_gemm_fused", m=m, n=n, kw=kw,
+                                      pl=int(packed_lhs))
         params = {**tuned, **params}
     if route == "vpu":
         return binary_gemm_vpu_packed_io(a, b_packed, thresh, flip, k_true,

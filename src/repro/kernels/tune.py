@@ -4,11 +4,14 @@ Every packed kernel entry point (`dispatch_binary_gemm{,_fused}`,
 `decode_attention_packed`, `prefill_attention_packed`) asks this module
 which realization to run for its static shape:
 
-    route, params = tune.get_route("binary_gemm", m=m, n=n, kw=kw)
+    route, params = tune.get_route("binary_gemm", m=m, n=n, kw=kw, pl=1)
 
 Shapes are bucketed (size-like dims rounded up to powers of two; small
-structural dims — kv heads, GQA group, head_dim — kept exact) and looked
-up in a per-backend JSON cache committed to the repo
+structural dims — kv heads, GQA group, head_dim, and the GEMMs' lhs
+form `pl` (1 = packed uint32 lhs, 0 = float chain-entry lhs, which runs
+a different kernel: in-kernel sign-pack over (bm, bk*32) float blocks)
+— kept exact) and looked up in a per-backend JSON cache committed to
+the repo
 (`kernels/tuned/<backend>.json`), so CI hosts and fresh checkouts get
 tuned routes without ever running the tuner. On a cache miss the answer
 falls back to a backend heuristic — or, when `REPRO_AUTOTUNE=1` is set
@@ -81,23 +84,31 @@ DECODE_BLOCK_B = [1, 2, 4, 8]
 PREFILL_BLOCKS = [dict(block_q=bq, block_b=bb)
                   for bq in (4, 8, 16) for bb in (1, 4)]
 
+# The GEMM buckets are tuned per lhs form (pl=1 packed wire-format lhs,
+# pl=0 float chain-entry lhs): the two forms run different kernels on the
+# 'vpu' route (binary_gemm_vpu vs the in-kernel-pack binary_gemm_vpu_packed),
+# so one timing cannot stand in for both.
+_GEMM_SHAPES = [
+    dict(m=4, n=64, kw=2),        # smoke decode projections
+    dict(m=8, n=128, kw=2),
+    dict(m=32, n=128, kw=4),      # smoke prefill chunks
+    dict(m=8, n=512, kw=16),
+    dict(m=64, n=1024, kw=32),
+    dict(m=256, n=2048, kw=64),   # prefill-scale GEMM
+]
+_FUSED_SHAPES = [
+    dict(m=4, n=64, kw=2),
+    dict(m=8, n=128, kw=2),
+    dict(m=32, n=128, kw=4),
+    dict(m=64, n=1024, kw=32),
+]
+
 # The shape buckets CI guarantees are tuned (--check fails on a gap):
 # the committed benchmarks' shapes plus the smoke-family serving shapes.
 STANDARD_SHAPES: dict[str, list[dict[str, int]]] = {
-    "binary_gemm": [
-        dict(m=4, n=64, kw=2),        # smoke decode projections
-        dict(m=8, n=128, kw=2),
-        dict(m=32, n=128, kw=4),      # smoke prefill chunks
-        dict(m=8, n=512, kw=16),
-        dict(m=64, n=1024, kw=32),
-        dict(m=256, n=2048, kw=64),   # prefill-scale GEMM
-    ],
-    "binary_gemm_fused": [
-        dict(m=4, n=64, kw=2),
-        dict(m=8, n=128, kw=2),
-        dict(m=32, n=128, kw=4),
-        dict(m=64, n=1024, kw=32),
-    ],
+    "binary_gemm": [dict(s, pl=pl) for s in _GEMM_SHAPES for pl in (1, 0)],
+    "binary_gemm_fused": [dict(s, pl=pl)
+                          for s in _FUSED_SHAPES for pl in (1, 0)],
     "decode_attention": [
         dict(b=4, t=16, hkv=2, g=2, hd=16),    # smoke serving engine
         dict(b=8, t=128, hkv=2, g=4, hd=64),
@@ -258,11 +269,20 @@ def _problem(kernel: str, shape: dict[str, int]):
     if kernel in ("binary_gemm", "binary_gemm_fused"):
         m, n, kw = shape["m"], shape["n"], shape["kw"]
         k = kw * 32
-        a = jax.random.bits(ks[0], (m, kw), jnp.uint32)
+        # pl keys the lhs form: packed wire-format words (the bit-resident
+        # chain) vs float activations (chain entry) — the 'vpu' route runs
+        # a different kernel for each, so each form is timed as itself.
+        if shape.get("pl", 1):
+            a = jax.random.bits(ks[0], (m, kw), jnp.uint32)
+            aw = a
+        else:
+            a = jax.random.normal(ks[0], (m, k))
+            aw = pack_bits(a)
         b = jax.random.bits(ks[1], (n, kw), jnp.uint32)
         if kernel == "binary_gemm":
             args = (a, b)
-            oracle = lambda a, b: ref.binary_matmul_packed_ref(a, b, k)
+            oracle = lambda a, b, aw=aw: ref.binary_matmul_packed_ref(
+                aw, b, k)
             make = lambda route, p: (
                 lambda a, b: binary_gemm.dispatch_binary_gemm(
                     a, b, k, route=route, **p))
@@ -270,8 +290,8 @@ def _problem(kernel: str, shape: dict[str, int]):
         th = jax.random.randint(ks[2], (n,), -8, 8, jnp.int32)
         fl = jax.random.randint(ks[3], (n,), 0, 2, jnp.int32)
         args = (a, b, th, fl)
-        oracle = lambda a, b, th, fl: ref.binary_matmul_fused_ref(
-            a, b, th, fl, k)
+        oracle = lambda a, b, th, fl, aw=aw: ref.binary_matmul_fused_ref(
+            aw, b, th, fl, k)
         make = lambda route, p: (
             lambda a, b, th, fl: binary_gemm.dispatch_binary_gemm_fused(
                 a, b, th, fl, k, route=route, **p))

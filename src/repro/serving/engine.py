@@ -154,8 +154,13 @@ class ServingEngine:
         for k, n in [(cfg.d_model, cfg.d_model), (cfg.d_model, cfg.d_ff),
                      (cfg.d_ff, cfg.d_model)]:
             if k and n:
-                out[f"binary_gemm_fused[{m}x{k}->{n}]"] = tune.get_route(
-                    "binary_gemm_fused", m=m, n=n, kw=packed_width(k))
+                # both lhs forms run at serve time: float at the chain entry
+                # (pl=0), packed wire-format words after (pl=1) — the cache
+                # keys them separately because they run different kernels
+                for pl, tag in ((1, "bits"), (0, "f32")):
+                    out[f"binary_gemm_fused[{m}x{k}->{n}|{tag}]"] = \
+                        tune.get_route("binary_gemm_fused", m=m, n=n,
+                                       kw=packed_width(k), pl=pl)
         if cfg.n_kv_heads:
             g = max(1, cfg.n_heads // cfg.n_kv_heads)
             out[f"decode_attention[b{m}_t{self.max_len}]"] = tune.get_route(

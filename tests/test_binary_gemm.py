@@ -54,7 +54,13 @@ def test_vpu_block_shape_sweep(bm, bn, bk, uk):
     np.testing.assert_array_equal(want, got)
 
 
-@pytest.mark.parametrize("m,k,n", [(17, 100, 33), (8, 32, 16), (5, 130, 70)])
+@pytest.mark.parametrize("m,k,n", [
+    (17, 100, 33), (8, 32, 16), (5, 130, 70),
+    # kw=12: strictly between the uk=8 candidates and their next multiple,
+    # so the fused kernel's fori_loop sliver path runs with uk clamped to a
+    # divisor of kw (a non-divisor would silently drop trailing K-words)
+    (9, 384, 40),
+])
 def test_all_tuner_candidates_bit_exact(m, k, n):
     """Every (route, tile) candidate the autotuner may ever pick for the
     packed GEMMs (tune.candidates) is bit-exact vs the oracles — for both
@@ -92,6 +98,29 @@ def test_all_tuner_candidates_bit_exact(m, k, n):
                 lhs, b_p, th, fl, kk, route=route, **params))
             np.testing.assert_array_equal(
                 want_f, got, err_msg=f"fused {route} {params}")
+
+
+@pytest.mark.parametrize("kw,uk", [
+    (12, 8),    # the reported bug: bucket-tuned uk=8 applied at kw=12
+    (5, 2), (7, 4), (20, 8), (3, 8),
+])
+def test_fused_kernel_uk_nondivisor_of_kw_bit_exact(kw, uk):
+    """Regression: binary_gemm_vpu_packed_io must clamp uk to a divisor of
+    kw (fused_gemm_geometry), else the kw//uk-step fori_loop drops the
+    trailing kw%uk words. These (kw, uk) pairs all hit 1 < uk < kw with
+    kw % uk != 0 before clamping — the regime dispatch reaches when a
+    pow2-bucket-tuned uk is applied to a smaller in-bucket shape."""
+    from repro.kernels.binary_gemm import binary_gemm_vpu_packed_io
+    key = jax.random.PRNGKey(kw * 100 + uk)
+    m, n, k = 9, 40, kw * 32
+    a = jax.random.bits(key, (m, kw), jnp.uint32)
+    b = jax.random.bits(jax.random.fold_in(key, 1), (n, kw), jnp.uint32)
+    th = jax.random.randint(jax.random.fold_in(key, 2), (n,), -5, 5)
+    fl = jax.random.randint(jax.random.fold_in(key, 3), (n,), 0, 2)
+    want = np.asarray(ref.binary_matmul_fused_ref(a, b, th, fl, k))
+    got = np.asarray(binary_gemm_vpu_packed_io(a, b, th, fl, k,
+                                               bm=128, bn=256, uk=uk))
+    np.testing.assert_array_equal(want, got)
 
 
 def test_mxu_block_shape_sweep():

@@ -15,7 +15,9 @@ from repro.kernels import ref, tune
 from repro.kernels._geometry import (
     attn_geometry, fused_gemm_geometry, gemm_geometry,
 )
-from repro.kernels.binary_gemm import dispatch_binary_gemm
+from repro.kernels.binary_gemm import (
+    dispatch_binary_gemm, dispatch_binary_gemm_fused,
+)
 from repro.models.api import get_model
 from repro.serving.engine import ServingEngine
 
@@ -100,17 +102,21 @@ def test_dispatch_runs_the_cached_route(monkeypatch):
     x = jax.random.normal(key, (17, 100))
     w = jax.random.normal(jax.random.fold_in(key, 1), (100, 33))
     a_p, b_p, k = ref.pack_operands(x, w)
-    got = np.asarray(dispatch_binary_gemm(a_p, b_p, k))
-    np.testing.assert_array_equal(
-        got, np.asarray(ref.binary_matmul_packed_ref(a_p, b_p, k)))
-    (kernel, shape, (route, params)), = calls
-    assert kernel == "binary_gemm"
-    assert shape == dict(m=17, n=33, kw=a_p.shape[1])
-    entry = tune.load_cache().get(kernel, {}).get(tune.bucket_key(shape))
-    if entry is not None:
-        assert (route, params) == (entry["route"], entry["params"])
-    else:
-        assert (route, params) == tune._heuristic(kernel, shape)
+    want = np.asarray(ref.binary_matmul_packed_ref(a_p, b_p, k))
+    # both lhs forms resolve through the cache, keyed by pl (they run
+    # different kernels on the vpu route, so they are tuned separately)
+    for lhs, pl in ((a_p, 1), (x, 0)):
+        calls.clear()
+        got = np.asarray(dispatch_binary_gemm(lhs, b_p, k))
+        np.testing.assert_array_equal(got, want)
+        (kernel, shape, (route, params)), = calls
+        assert kernel == "binary_gemm"
+        assert shape == dict(m=17, n=33, kw=a_p.shape[1], pl=pl)
+        entry = tune.load_cache().get(kernel, {}).get(tune.bucket_key(shape))
+        if entry is not None:
+            assert (route, params) == (entry["route"], entry["params"])
+        else:
+            assert (route, params) == tune._heuristic(kernel, shape)
 
 
 def test_explicit_route_bypasses_cache(monkeypatch):
@@ -147,6 +153,64 @@ def test_engine_kernel_routes_match_cache():
         assert route in ("vpu", "mxu", "xla", "float", "pallas")
 
 
+def _ragged_in_bucket(v: int) -> int:
+    """A smaller size that still rounds up into the same pow2 bucket as v
+    (and, for v >= 16, is not a multiple of 8 — so bucket-tuned uk=8
+    params hit the sliver-streaming fori_loop path on the real shape)."""
+    if v <= 2:
+        return v
+    return v - 3 if v > 8 else v - 1
+
+
+def test_bucket_tuned_params_bit_exact_on_ragged_in_bucket_shapes():
+    """The 'dispatch can never change results' invariant at its weakest
+    point: the tuner validates candidates at the pow2 bucket shape, but
+    dispatch applies the persisted params to every real shape in the
+    bucket — e.g. a tuned uk=8 landing on kw=13, where an unclamped uk
+    would silently drop trailing K-words. Every committed gemm cache
+    entry is exercised at a ragged shape strictly inside its bucket."""
+    cache = tune.load_cache()
+    ran = 0
+    for kernel in ("binary_gemm", "binary_gemm_fused"):
+        for shape in tune.STANDARD_SHAPES[kernel]:
+            b = tune.bucket(shape)
+            if b["m"] * b["n"] * b["kw"] > 1 << 23:
+                continue      # keep CI time bounded; params repeat anyway
+            entry = cache.get(kernel, {}).get(tune.bucket_key(shape))
+            if entry is None:
+                continue
+            m, n, kw = (_ragged_in_bucket(b[d]) for d in ("m", "n", "kw"))
+            assert tune.bucket_key(dict(b, m=m, n=n, kw=kw)) == \
+                tune.bucket_key(shape)
+            k = kw * 32
+            key = jax.random.PRNGKey(ran)
+            a_p = jax.random.bits(key, (m, kw), jnp.uint32)
+            b_p = jax.random.bits(jax.random.fold_in(key, 1), (n, kw),
+                                  jnp.uint32)
+            lhs = a_p if b["pl"] else \
+                jax.random.normal(jax.random.fold_in(key, 4), (m, k))
+            aw = a_p if b["pl"] else ref.pack_bits(lhs)
+            if kernel == "binary_gemm":
+                want = np.asarray(ref.binary_matmul_packed_ref(aw, b_p, k))
+                got = np.asarray(dispatch_binary_gemm(lhs, b_p, k))
+            else:
+                th = jax.random.randint(jax.random.fold_in(key, 2), (n,),
+                                        -5, 5)
+                fl = jax.random.randint(jax.random.fold_in(key, 3), (n,),
+                                        0, 2)
+                want = np.asarray(ref.binary_matmul_fused_ref(
+                    aw, b_p, th, fl, k))
+                got = np.asarray(dispatch_binary_gemm_fused(
+                    lhs, b_p, th, fl, k))
+            np.testing.assert_array_equal(
+                want, got,
+                err_msg=f"{kernel} {tune.bucket_key(shape)} "
+                        f"({entry['route']} {entry['params']}) applied at "
+                        f"m={m} n={n} kw={kw}")
+            ran += 1
+    assert ran >= 8     # the committed cache really was exercised
+
+
 # ---------------------------------------------------------------------------
 # Geometry helpers (the shared clamp/pad rules the kernels consume)
 # ---------------------------------------------------------------------------
@@ -167,11 +231,23 @@ def test_gemm_geometry_clamps_pads_and_caches():
 
 
 def test_fused_geometry_keeps_bn_word_aligned():
-    g = fused_gemm_geometry(9, 70, 128, 256)
+    g = fused_gemm_geometry(9, 70, 4, 128, 256)
     assert g.bn % 32 == 0 and g.bn >= 70
     assert (g.pm, g.gm) == (0, 1)
     with pytest.raises(AssertionError, match="multiple"):
-        fused_gemm_geometry(9, 70, 128, 100)
+        fused_gemm_geometry(9, 70, 4, 128, 100)
+
+
+def test_fused_geometry_clamps_uk_to_divide_kw():
+    """The fused kernel keeps K whole per block, so its inner fori_loop
+    runs kw//uk steps — uk must divide kw or trailing words are dropped.
+    The geometry owns that clamp (same rule gemm_geometry uses for bk)."""
+    # uk >= kw clamps to kw, which the kernel runs as whole-tile broadcast
+    for kw, uk, want in [(12, 8, 6), (12, 12, 12), (12, 16, 12), (5, 2, 1),
+                         (20, 8, 5), (7, 4, 1), (16, 8, 8), (3, 0, 0)]:
+        g = fused_gemm_geometry(9, 70, kw, 128, 256, uk)
+        assert g.uk == want, (kw, uk, g.uk)
+        assert g.uk == 0 or kw % g.uk == 0
 
 
 def test_attn_geometry_clamps_both_axes():
