@@ -1,0 +1,198 @@
+"""Paged packed KV cache + radix-tree prefix caching vs the contiguous
+chunked baseline, on Poisson traffic with Zipf-shared prompt prefixes.
+
+Traffic: every request draws one of three system prompts (Zipf weights,
+p proportional to 1/rank — the realistic case where one header dominates)
+and appends a short unique suffix. The baseline scheduler re-prefills the
+shared header for every request; the paged scheduler admits through the
+radix tree, pins the header's pages zero-copy into the new slot's page
+table, and prefills only the unseen suffix. Decode then walks the page
+table — same arithmetic, different addressing — so outputs must match the
+baseline token for token (asserted per request).
+
+Reported (measured on the second, fully-warm pass, where the tree holds
+every header):
+  * prefill tokens saved as a fraction of all prompt tokens (gated
+    >= 50%: with shared headers dominating prompt length this is what the
+    tree exists to deliver; deterministic, hardware-independent);
+  * TTFT p50/p99, device-synced compute of each request's own admission
+    (suffix-only on a hit) — gated <= the contiguous chunked baseline's;
+  * page-pool bytes for the kv_bits=1 pools vs the same pool layout held
+    as floats (~16x+: why the pool holds enough pages to make sharing
+    hit) — `cache_bytes_packed` / `cache_bytes_float` feed the
+    packed-vs-float regression gate in check_regression.py, and
+    `prefill_saved_frac` its absolute floor.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ARCH = "musicgen-large"     # audio family: 2-layer smoke config, cheapest
+CHUNK = 8
+PAGE = 8                    # kv_bits=1 + tree needs PAGE % CHUNK == 0
+SLOTS = 3
+
+
+def _traffic(cfg, smoke: bool):
+    """Zipf-shared prefixes + unique suffixes on Poisson arrival ticks."""
+    from repro.serving.engine import Request
+
+    rng = np.random.default_rng(0)
+    n_reqs = 9 if smoke else 14
+    headers = [rng.integers(0, cfg.vocab, n, dtype=np.int32)
+               for n in (49, 33, 25)]          # multi-page shared prefixes
+    zipf = np.array([1 / (r + 1) for r in range(len(headers))])
+    zipf /= zipf.sum()
+    reqs = []
+    for _ in range(n_reqs):
+        h = headers[rng.choice(len(headers), p=zipf)]
+        suffix = rng.integers(0, cfg.vocab, int(rng.integers(3, 8)),
+                              dtype=np.int32)
+        reqs.append(Request(
+            prompt=np.concatenate([h, suffix]).astype(np.int32),
+            max_new_tokens=int(rng.integers(3, 7))))
+    gaps = np.clip(rng.exponential(0.8, size=n_reqs - SLOTS), 0.2, 1.5)
+    arrivals = [0.0] * SLOTS + list(1.0 + np.cumsum(gaps))
+    return reqs, arrivals
+
+
+def _drive(sched, reqs, arrivals):
+    """Submit on poll ticks; poll until everything completes."""
+    pending = sorted(zip(arrivals, range(len(reqs))), key=lambda x: x[0])
+    comps, tick = {}, 0
+    while pending or not sched.idle:
+        while pending and pending[0][0] <= tick:
+            sched.submit(reqs[pending.pop(0)[1]])
+        for c in sched.poll(drain=not pending):
+            comps[c.rid] = c
+        tick += 1
+    return comps
+
+
+def _bench_mode(cfg, model, params, reqs, arrivals, paged: bool):
+    from repro.serving.scheduler import Scheduler
+
+    max_len = max(r.prompt.size + r.max_new_tokens for r in reqs) + 1
+    max_len = -(-max_len // PAGE) * PAGE       # page-aligned slot extent
+    # pool sized so live slots + every header chain + retired suffix tails
+    # fit without eviction churn — the packed pool makes pages cheap
+    # enough that this is the normal operating point (see _pool_bytes)
+    kw = (dict(page_size=PAGE, prefix_cache=True, pool_pages=128)
+          if paged else {})
+    sched = Scheduler(cfg, model, params, n_slots=SLOTS, max_len=max_len,
+                      prefill_chunk=CHUNK, interleave_steps=4, **kw)
+    base = dict(sched.stats)
+    _drive(sched, reqs, arrivals)              # warm 1: compiles + fills tree
+    # warm 2: with the tree now hot, admissions take fewer chunks, so the
+    # burst sequence (and its static drain/bounded jit variants) differs
+    # from the cold pass — run it once un-timed so the measured pass pays
+    # zero compiles
+    _drive(sched, reqs, arrivals)
+    for k, v in base.items():                  # measure the final pass only
+        sched.stats[k] = v
+    t0 = time.perf_counter()
+    comps = _drive(sched, reqs, arrivals)      # fully warm
+    wall = time.perf_counter() - t0
+    ttft = np.asarray([c.ttft for c in comps.values()])
+    total_prompt = sum(r.prompt.size for r in reqs)
+    return {
+        "wall": wall,
+        "ttft_p50": float(np.percentile(ttft, 50)),
+        "ttft_p99": float(np.percentile(ttft, 99)),
+        "prefill_tokens": int(sched.stats["prefill_tokens"]),
+        "saved": int(sched.stats["prefill_tokens_saved"]),
+        "saved_frac": sched.stats["prefill_tokens_saved"] / total_prompt,
+        "hits": int(sched.stats["prefix_hits"]),
+        "tokens_out": int(sched.stats["tokens_out"]),
+        "page_stats": sched.page_stats(),
+        "comps": comps,
+    }
+
+
+def _pool_bytes(model_packed, model_float, max_len):
+    """Page-pool resident bytes at the same geometry, packed vs float."""
+    out = []
+    for model in (model_packed, model_float):
+        cache = jax.eval_shape(lambda m=model: m.init_cache(
+            SLOTS, max_len, page_size=PAGE))
+        out.append(sum(
+            int(np.prod(l.shape, dtype=np.int64)) *
+            jnp.dtype(l.dtype).itemsize
+            for l in jax.tree.leaves(cache)))
+    return out
+
+
+def run(smoke: bool = False) -> list[tuple[str, float, str]]:
+    from repro.configs.smoke import smoke_config
+    from repro.models.api import get_model
+
+    cfg = smoke_config(ARCH).scaled(kv_bits=1)
+    model = get_model(cfg)
+    params = model.freeze(model.init(jax.random.PRNGKey(0)))
+    reqs, arrivals = _traffic(cfg, smoke)
+
+    base = _bench_mode(cfg, model, params, reqs, arrivals, paged=False)
+    paged = _bench_mode(cfg, model, params, reqs, arrivals, paged=True)
+
+    # paging + prefix sharing must be invisible in the outputs
+    for rid, c in base["comps"].items():
+        np.testing.assert_array_equal(c.tokens, paged["comps"][rid].tokens)
+
+    max_len = -(-max(r.prompt.size + r.max_new_tokens
+                     for r in reqs) // PAGE) * PAGE + PAGE
+    packed_b, float_b = _pool_bytes(
+        model, get_model(cfg.scaled(kv_bits=0)), max_len)
+
+    # -- gates -------------------------------------------------------------
+    # >= 50% of all prompt tokens served from the tree (deterministic)
+    assert paged["saved_frac"] >= 0.5, paged["saved_frac"]
+    # a hit charges only the unseen suffix to TTFT: the paged percentiles
+    # must not exceed the re-prefill-everything baseline (compute-seconds,
+    # device-synced; the gap is ~the header/suffix ratio, far above noise)
+    assert paged["ttft_p50"] <= base["ttft_p50"], (paged, base)
+    assert paged["ttft_p99"] <= base["ttft_p99"], (paged, base)
+    # token accounting closes exactly
+    total_prompt = sum(r.prompt.size for r in reqs)
+    assert paged["prefill_tokens"] + paged["saved"] == total_prompt
+    # the bit-resident pool is what buys the page headroom
+    assert packed_b * 8 < float_b, (packed_b, float_b)
+
+    rows = [
+        ("contiguous_chunked", base["wall"] * 1e6,
+         f"ttft p50 {base['ttft_p50']*1e3:.1f}ms p99 "
+         f"{base['ttft_p99']*1e3:.1f}ms, prefill {base['prefill_tokens']} "
+         f"tok (re-prefills every shared header)"),
+        ("paged_prefix_cache", paged["wall"] * 1e6,
+         f"ttft p50 {paged['ttft_p50']*1e3:.1f}ms p99 "
+         f"{paged['ttft_p99']*1e3:.1f}ms, prefill "
+         f"{paged['prefill_tokens']} tok, {paged['hits']} hits, "
+         f"{paged['saved']} tok zero-copy "
+         f"({paged['saved_frac']:.0%} of prompt tokens)"),
+        ("paged_vs_contiguous", 0.0,
+         f"{paged['saved_frac']:.0%} prefill tokens saved; ttft p50 "
+         f"{base['ttft_p50']/max(paged['ttft_p50'], 1e-9):.1f}x lower; "
+         f"pool bytes packed {packed_b/1e6:.3f}MB vs float "
+         f"{float_b/1e6:.3f}MB ({float_b/packed_b:.1f}x)"),
+    ]
+    try:
+        from benchmarks._record import record
+    except ImportError:          # run as a script: benchmarks/ is sys.path[0]
+        from _record import record
+    record("prefix_cache", rows, smoke=smoke,
+           prefill_saved_frac=round(paged["saved_frac"], 4),
+           ttft_p50_base=base["ttft_p50"], ttft_p50_paged=paged["ttft_p50"],
+           ttft_p99_base=base["ttft_p99"], ttft_p99_paged=paged["ttft_p99"],
+           prefix_hits=paged["hits"],
+           cache_bytes_packed=packed_b, cache_bytes_float=float_b)
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for name, us, derived in run(smoke="--smoke" in sys.argv):
+        print(f"{name},{us:.1f},{derived}")

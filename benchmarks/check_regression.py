@@ -9,7 +9,10 @@ always better-when-larger:
     latency pairs    (us_packed   / us_float):      float / packed
 
 so "packed got 10% slower relative to float" fails regardless of which
-direction the metric is measured in. Trajectories with fewer than two
+direction the metric is measured in. On top of the ratio gates, a small
+set of absolute FLOORS applies to the newest record of any trajectory
+carrying the key (e.g. the prefix cache must keep saving >= 50% of
+prompt prefill tokens). Trajectories with fewer than two
 entries, or without a recognized packed/float key pair, are skipped —
 this gate watches the *flip* PR 6 established (ROADMAP item 1: packed
 beats float in wall-clock), it does not pin absolute numbers, which vary
@@ -30,6 +33,16 @@ import sys
 PAIRS = [
     ("tok_s_packed", "tok_s_fp32", "high"),
     ("us_packed", "us_float", "low"),
+    ("cache_bytes_packed", "cache_bytes_float", "low"),
+]
+
+# Absolute floors on the LAST record of any trajectory that carries the
+# key — deterministic properties a PR must not erode (unlike the ratio
+# gates above, these don't need two entries or tolerate drift):
+#   prefill_saved_frac — fraction of prompt tokens the prefix cache served
+#   zero-copy under Zipf-shared-header traffic (bench_prefix_cache).
+FLOORS = [
+    ("prefill_saved_frac", 0.5),
 ]
 
 
@@ -42,20 +55,33 @@ def advantage(rec: dict) -> dict[str, float]:
     return out
 
 
+def check_floors(name: str, rec: dict) -> list[str]:
+    failures = []
+    for key, floor in FLOORS:
+        if key in rec:
+            status = "BELOW FLOOR" if rec[key] < floor else "ok"
+            print(f"{name}: {key} {rec[key]:.3f} (floor {floor}) {status}")
+            if rec[key] < floor:
+                failures.append(f"{name}: {key} {rec[key]:.3f} fell below "
+                                f"the {floor} floor")
+    return failures
+
+
 def check_file(path: str, tolerance: float) -> list[str]:
     with open(path) as f:
         rows = json.load(f)
     name = os.path.basename(path)
+    floor_failures = check_floors(name, rows[-1]) if rows else []
     if len(rows) < 2:
         print(f"{name}: {len(rows)} entr{'y' if len(rows) == 1 else 'ies'}, "
               "nothing to compare — skipped")
-        return []
+        return floor_failures
     prev, last = advantage(rows[-2]), advantage(rows[-1])
     common = sorted(set(prev) & set(last))
     if not common:
         print(f"{name}: no packed-vs-float key pair — skipped")
-        return []
-    failures = []
+        return floor_failures
+    failures = floor_failures
     for key in common:
         drop = 1.0 - last[key] / prev[key]
         status = "REGRESSED" if drop > tolerance else "ok"

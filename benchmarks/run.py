@@ -22,6 +22,10 @@ _record.py).
                              interleaved with decode bursts vs whole-prompt
                              head-of-line blocking: inter-token p99, TTFT,
                              admission stall, compile counts)
+  paged KV + prefix cache -> bench_prefix_cache (radix-tree prefix sharing
+                             over the paged packed pool vs contiguous
+                             chunked: prefill tokens saved, TTFT, pool
+                             bytes packed vs float)
   roofline (dry-run)      -> src/repro/roofline/report.py (separate: needs
                              the 512-device dryrun_results.jsonl)
 """
@@ -40,18 +44,19 @@ def main() -> None:
         bench_accuracy, bench_binary_gemm, bench_bit_resident,
         bench_continuous_serving, bench_convergence, bench_decode_attention,
         bench_energy, bench_kernel_dedup, bench_packed_serving,
-        bench_prefill_interleave, bench_saturation,
+        bench_prefill_interleave, bench_prefix_cache, bench_saturation,
     )
     from benchmarks._record import record
     mods = [bench_energy, bench_binary_gemm, bench_packed_serving,
             bench_continuous_serving, bench_prefill_interleave,
-            bench_bit_resident, bench_decode_attention, bench_kernel_dedup,
-            bench_accuracy, bench_saturation, bench_convergence]
+            bench_prefix_cache, bench_bit_resident, bench_decode_attention,
+            bench_kernel_dedup, bench_accuracy, bench_saturation,
+            bench_convergence]
     # these record their own trajectory entries (rows + structured extras),
     # standalone or under run.py — don't double-append
     self_recording = {bench_bit_resident, bench_decode_attention,
                       bench_packed_serving, bench_continuous_serving,
-                      bench_prefill_interleave}
+                      bench_prefill_interleave, bench_prefix_cache}
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")
     for mod in mods:

@@ -72,13 +72,12 @@ def v_cache_scale(v: Array) -> Array:
     return jnp.mean(jnp.abs(v.astype(jnp.float32)), axis=(1, 3))
 
 
-def _decode_packed_kernel(len_ref, q_ref, k_ref, v_ref, s_ref, o_ref, *,
-                          hd: int, hdw: int, window: int):
-    """`bb` batch rows of one kv head: q_ref (bb,1,G,hdw) uint32,
-    k_ref/v_ref (bb,1,T,hdw) uint32, len_ref (bb,1) int32, s_ref (bb,1)
-    f32, o_ref (bb,1,G,hd) f32."""
-    qb = q_ref[:, 0]                                           # (bb, G, hdw)
-    kb = k_ref[:, 0]                                           # (bb, T, hdw)
+def _attend_decode(qb, kb, vb, lens, vs, *, hd: int, hdw: int, window: int):
+    """Shared decode-attention core: qb (bb,G,hdw) uint32, kb/vb (bb,T,hdw)
+    uint32, lens/vs (bb,1); returns (bb,G,hd) f32. The contiguous and paged
+    kernels both end here — the paged variant only changes how kb/vb were
+    *addressed* (gathered from the page pool), never the float op sequence,
+    which is what makes paged == contiguous bit-exact at equal T."""
     bb, t = kb.shape[0], kb.shape[1]
     g = qb.shape[1]
 
@@ -90,7 +89,7 @@ def _decode_packed_kernel(len_ref, q_ref, k_ref, v_ref, s_ref, o_ref, *,
     dots = jnp.int32(hd) - 2 * acc                             # sign dot
     s = dots.astype(jnp.float32) * jnp.float32(1.0 / float(hd) ** 0.5)
     pos = jax.lax.broadcasted_iota(jnp.int32, (1, 1, t), 2)
-    length = len_ref[...][:, :, None]                          # (bb, 1, 1)
+    length = lens[:, :, None]                                  # (bb, 1, 1)
     valid = pos < length                                       # (bb, 1, T)
     if window > 0:
         valid &= pos >= length - window
@@ -98,9 +97,41 @@ def _decode_packed_kernel(len_ref, q_ref, k_ref, v_ref, s_ref, o_ref, *,
     m = jnp.max(s, axis=-1, keepdims=True)
     e = jnp.exp(s - m)                                         # masked -> 0.0
     l = jnp.sum(e, axis=-1, keepdims=True)                     # (bb, G, 1)
-    sgn = unpack_bits(v_ref[:, 0], hd)                         # (bb, T, hd)
+    sgn = unpack_bits(vb, hd)                                  # (bb, T, hd)
     accv = jnp.sum(e[:, :, :, None] * sgn[:, None, :, :], axis=2)
-    o_ref[:, 0] = s_ref[...][:, :, None] * (accv / l)          # (bb, G, hd)
+    return vs[:, :, None] * (accv / l)                         # (bb, G, hd)
+
+
+def _decode_packed_kernel(len_ref, q_ref, k_ref, v_ref, s_ref, o_ref, *,
+                          hd: int, hdw: int, window: int):
+    """`bb` batch rows of one kv head: q_ref (bb,1,G,hdw) uint32,
+    k_ref/v_ref (bb,1,T,hdw) uint32, len_ref (bb,1) int32, s_ref (bb,1)
+    f32, o_ref (bb,1,G,hd) f32."""
+    o_ref[:, 0] = _attend_decode(q_ref[:, 0], k_ref[:, 0], v_ref[:, 0],
+                                 len_ref[...], s_ref[...],
+                                 hd=hd, hdw=hdw, window=window)
+
+
+def _decode_packed_paged_kernel(len_ref, pt_ref, q_ref, kp_ref, vp_ref,
+                                s_ref, o_ref, *, hd: int, hdw: int,
+                                window: int):
+    """Paged twin of `_decode_packed_kernel`: kp_ref/vp_ref hold one kv
+    head's whole page pool (1, P, ps, hdw) and pt_ref the block's page
+    tables (bb, NP). The rows are gathered in VMEM into the same
+    (bb, NP*ps, hdw) panel shape the contiguous kernel reads, then the
+    shared core runs unchanged. Sentinel table entries (== P, unallocated)
+    clip to the last pool page; those garbage rows sit at positions
+    >= cache_len and the core's length mask drops them — the exact
+    convention the contiguous kernel already uses for rows past kv_len."""
+    pt = pt_ref[...]                                           # (bb, NP)
+    bb, np_ = pt.shape
+    p_pool, ps = kp_ref.shape[1], kp_ref.shape[2]
+    pid = jnp.minimum(pt, p_pool - 1).reshape(-1)              # (bb*NP,)
+    kb = jnp.take(kp_ref[0], pid, axis=0).reshape(bb, np_ * ps, hdw)
+    vb = jnp.take(vp_ref[0], pid, axis=0).reshape(bb, np_ * ps, hdw)
+    o_ref[:, 0] = _attend_decode(q_ref[:, 0], kb, vb,
+                                 len_ref[...], s_ref[...],
+                                 hd=hd, hdw=hdw, window=window)
 
 
 def decode_attention_packed(q: Array, k_packed: Array, v_packed: Array,
@@ -177,4 +208,81 @@ def decode_attention_packed(q: Array, k_packed: Array, v_packed: Array,
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(lens, qb, kb, vb, vs)
+    return out[:b].reshape(b, 1, hkv * g, hd).astype(q.dtype)
+
+
+def decode_attention_packed_paged(q: Array, k_pool: Array, v_pool: Array,
+                                  v_scale: Array, page_table: Array,
+                                  cache_len: Array, *, window: int = 0,
+                                  block_b: int | None = None,
+                                  route: str | None = None,
+                                  interpret: bool | None = None) -> Array:
+    """Single-token decode attention against a *paged* bit-resident cache.
+
+    q: (B, 1, Hq, hd) float; k_pool, v_pool: (P, ps, Hkv, ceil(hd/32))
+    uint32 page pools shared by every slot; page_table: (B, NP) int32
+    mapping each slot's position range [i*ps, (i+1)*ps) to a pool page
+    (entries == P are the unallocated sentinel — they clip to the last
+    page and the garbage is masked by cache_len); v_scale: (B, Hkv);
+    cache_len: scalar or (B,). Returns (B, 1, Hq, hd) in q.dtype,
+    bit-exact with ref.decode_attention_packed_paged_ref — and with the
+    contiguous `decode_attention_packed` whenever NP*ps equals its T
+    (the kernels share `_attend_decode`; paging is pure addressing).
+    """
+    p_pool, ps, hkv, hdw = k_pool.shape
+    b, np_ = page_table.shape
+    hd = q.shape[-1]
+    g = q.shape[2] // hkv
+    if route is None:
+        from repro.kernels import tune
+        route, params = tune.get_route("decode_attention_paged", b=b,
+                                       t=np_ * ps, ps=ps, p=p_pool,
+                                       hkv=hkv, g=g, hd=hd)
+        if block_b is None:
+            block_b = params.get("block_b")
+    if route == "xla":
+        return ref.decode_attention_packed_paged_ref(
+            q, k_pool, v_pool, v_scale, page_table, cache_len, window=window)
+    if route != "pallas":
+        raise ValueError(f"unknown decode_attention_paged route: {route}")
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+
+    qb = pack_bits(q.reshape(b, hkv, g, hd))                   # (B,Hkv,G,hdw)
+    kp = k_pool.transpose(2, 0, 1, 3)                          # (Hkv,P,ps,hdw)
+    vp = v_pool.transpose(2, 0, 1, 3)
+    pt = jnp.asarray(page_table, jnp.int32)
+    lens = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32).reshape(-1),
+                            (b,)).reshape(b, 1)
+    vs = v_scale.astype(jnp.float32)
+
+    geo = attn_geometry(b, 1, block_b or 1, 1)
+    bb = geo.bb
+    if geo.pb:
+        qb = jnp.pad(qb, ((0, geo.pb),) + ((0, 0),) * 3)
+        # pad rows: length 1 (finite softmax, see contiguous kernel) and
+        # all-sentinel page tables — they clip to the last pool page, whose
+        # garbage words sit behind the length mask
+        lens = jnp.pad(lens, ((0, geo.pb), (0, 0)), constant_values=1)
+        pt = jnp.pad(pt, ((0, geo.pb), (0, 0)), constant_values=p_pool)
+        vs = jnp.pad(vs, ((0, geo.pb), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_decode_packed_paged_kernel, hd=hd, hdw=hdw,
+                          window=window),
+        grid=(geo.gb, hkv),
+        in_specs=[
+            pl.BlockSpec((bb, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb, np_), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb, 1, g, hdw), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, p_pool, ps, hdw), lambda i, j: (j, 0, 0, 0)),
+            pl.BlockSpec((1, p_pool, ps, hdw), lambda i, j: (j, 0, 0, 0)),
+            pl.BlockSpec((bb, 1), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, 1, g, hd), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b + geo.pb, hkv, g, hd), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(lens, pt, qb, kp, vp, vs)
     return out[:b].reshape(b, 1, hkv * g, hd).astype(q.dtype)

@@ -59,14 +59,14 @@ from repro.kernels.ref import NEG_INF
 Array = jax.Array
 
 
-def _prefill_packed_kernel(len_ref, qpos_ref, q_ref, k_ref, v_ref, s_ref,
-                           o_ref, *, hd: int, hdw: int, bq: int, window: int,
-                           causal: bool):
-    """`bb` batch rows of one (kv head, q sub-chunk): q_ref (bb,1,bq,G,hdw)
-    uint32, k_ref/v_ref (bb,1,T,hdw) uint32, len_ref/qpos_ref (bb,1) int32,
-    s_ref (bb,1) f32, o_ref (bb,1,bq,G,hd) f32."""
-    qb = q_ref[:, 0]                                           # (bb,bq,G,hdw)
-    kb = k_ref[:, 0]                                           # (bb, T, hdw)
+def _attend_prefill(qb, kb, vb, lens, qpos, vs, q_off, *, hd: int, hdw: int,
+                    bq: int, window: int, causal: bool):
+    """Shared prefill-attention core: qb (bb,bq,G,hdw) uint32, kb/vb
+    (bb,T,hdw) uint32, lens/qpos/vs (bb,1), q_off the sub-chunk's global
+    row offset (program_id(2)*bq); returns (bb,bq,G,hd) f32. The
+    contiguous and paged kernels both end here — paging only changes how
+    kb/vb were addressed, never the float op sequence, which is what makes
+    paged == contiguous bit-exact at equal T."""
     bb, t = kb.shape[0], kb.shape[1]
     g = qb.shape[2]
 
@@ -80,9 +80,9 @@ def _prefill_packed_kernel(len_ref, qpos_ref, q_ref, k_ref, v_ref, s_ref,
     dots = jnp.int32(hd) - 2 * acc                             # sign dot
     s = dots.astype(jnp.float32) * jnp.float32(1.0 / float(hd) ** 0.5)
     kpos = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, t), 3)
-    qp = qpos_ref[...][:, :, None, None] + pl.program_id(2) * bq + \
+    qp = qpos[:, :, None, None] + q_off + \
         jax.lax.broadcasted_iota(jnp.int32, (1, bq, 1, 1), 1)  # (bb,bq,1,1)
-    valid = kpos < len_ref[...][:, :, None, None]              # (bb,1,1,T)
+    valid = kpos < lens[:, :, None, None]                      # (bb,1,1,T)
     if causal:
         valid &= kpos <= qp
     if window > 0:
@@ -91,9 +91,41 @@ def _prefill_packed_kernel(len_ref, qpos_ref, q_ref, k_ref, v_ref, s_ref,
     m = jnp.max(s, axis=-1, keepdims=True)
     e = jnp.exp(s - m)                                         # masked -> 0.0
     l = jnp.sum(e, axis=-1, keepdims=True)                     # (bb,bq,G,1)
-    sgn = unpack_bits(v_ref[:, 0], hd)                         # (bb, T, hd)
+    sgn = unpack_bits(vb, hd)                                  # (bb, T, hd)
     accv = jnp.sum(e[:, :, :, :, None] * sgn[:, None, None, :, :], axis=3)
-    o_ref[:, 0] = s_ref[...][:, :, None, None] * (accv / l)    # (bb,bq,G,hd)
+    return vs[:, :, None, None] * (accv / l)                   # (bb,bq,G,hd)
+
+
+def _prefill_packed_kernel(len_ref, qpos_ref, q_ref, k_ref, v_ref, s_ref,
+                           o_ref, *, hd: int, hdw: int, bq: int, window: int,
+                           causal: bool):
+    """`bb` batch rows of one (kv head, q sub-chunk): q_ref (bb,1,bq,G,hdw)
+    uint32, k_ref/v_ref (bb,1,T,hdw) uint32, len_ref/qpos_ref (bb,1) int32,
+    s_ref (bb,1) f32, o_ref (bb,1,bq,G,hd) f32."""
+    o_ref[:, 0] = _attend_prefill(q_ref[:, 0], k_ref[:, 0], v_ref[:, 0],
+                                  len_ref[...], qpos_ref[...], s_ref[...],
+                                  pl.program_id(2) * bq, hd=hd, hdw=hdw,
+                                  bq=bq, window=window, causal=causal)
+
+
+def _prefill_packed_paged_kernel(len_ref, qpos_ref, pt_ref, q_ref, kp_ref,
+                                 vp_ref, s_ref, o_ref, *, hd: int, hdw: int,
+                                 bq: int, window: int, causal: bool):
+    """Paged twin of `_prefill_packed_kernel`: kp_ref/vp_ref hold one kv
+    head's whole page pool (1, P, ps, hdw) and pt_ref the block's page
+    tables (bb, NP); rows are gathered in VMEM into the contiguous
+    (bb, NP*ps, hdw) panel shape, then the shared core runs unchanged.
+    Sentinel entries (== P) clip to the last page, masked by kv_len."""
+    pt = pt_ref[...]                                           # (bb, NP)
+    bb, np_ = pt.shape
+    p_pool, ps = kp_ref.shape[1], kp_ref.shape[2]
+    pid = jnp.minimum(pt, p_pool - 1).reshape(-1)              # (bb*NP,)
+    kb = jnp.take(kp_ref[0], pid, axis=0).reshape(bb, np_ * ps, hdw)
+    vb = jnp.take(vp_ref[0], pid, axis=0).reshape(bb, np_ * ps, hdw)
+    o_ref[:, 0] = _attend_prefill(q_ref[:, 0], kb, vb,
+                                  len_ref[...], qpos_ref[...], s_ref[...],
+                                  pl.program_id(2) * bq, hd=hd, hdw=hdw,
+                                  bq=bq, window=window, causal=causal)
 
 
 def prefill_attention_packed(q: Array, k_packed: Array, v_packed: Array,
@@ -186,5 +218,96 @@ def prefill_attention_packed(q: Array, k_packed: Array, v_packed: Array,
             dimension_semantics=("parallel", "parallel", "parallel")),
         interpret=interpret,
     )(lens, qpos, qb, kb, vb, vs)
+    out = out[:b].transpose(0, 2, 1, 3, 4).reshape(b, s_pad, hkv * g, hd)
+    return out[:, :s].astype(q.dtype)
+
+
+def prefill_attention_packed_paged(q: Array, k_pool: Array, v_pool: Array,
+                                   v_scale: Array, page_table: Array,
+                                   kv_len: Array, q_pos: Array, *,
+                                   window: int = 0, causal: bool = True,
+                                   block_q: int | None = None,
+                                   block_b: int | None = None,
+                                   route: str | None = None,
+                                   interpret: bool | None = None) -> Array:
+    """Chunked-prefill attention against a *paged* bit-resident cache.
+
+    q: (B, S, Hq, hd) float query chunk; k_pool, v_pool: (P, ps, Hkv,
+    ceil(hd/32)) uint32 page pools; page_table: (B, NP) int32 (entries
+    == P are the unallocated sentinel); v_scale: (B, Hkv); kv_len /
+    q_pos: scalar or (B,) as in the contiguous entry point. Returns
+    (B, S, Hq, hd) in q.dtype, bit-exact with
+    ref.prefill_attention_packed_paged_ref — and with the contiguous
+    `prefill_attention_packed` whenever NP*ps equals its T (shared
+    `_attend_prefill` core; paging is pure addressing).
+    """
+    p_pool, ps, hkv, hdw = k_pool.shape
+    b, np_ = page_table.shape
+    s = q.shape[1]
+    hd = q.shape[-1]
+    g = q.shape[2] // hkv
+    if route is None:
+        from repro.kernels import tune
+        route, params = tune.get_route("prefill_attention_paged", b=b, s=s,
+                                       t=np_ * ps, ps=ps, p=p_pool,
+                                       hkv=hkv, g=g, hd=hd)
+        if block_q is None:
+            block_q = params.get("block_q")
+        if block_b is None:
+            block_b = params.get("block_b")
+    if route == "xla":
+        return ref.prefill_attention_packed_paged_ref(
+            q, k_pool, v_pool, v_scale, page_table, kv_len, q_pos,
+            window=window, causal=causal)
+    if route != "pallas":
+        raise ValueError(f"unknown prefill_attention_paged route: {route}")
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+
+    geo = attn_geometry(b, s, block_b or 1, block_q or 8)
+    bb, bq = geo.bb, geo.bq
+    if geo.ps:
+        q = jnp.pad(q, ((0, 0), (0, geo.ps), (0, 0), (0, 0)))
+    s_pad = s + geo.ps
+    qb = pack_bits(q.reshape(b, s_pad, hkv, g, hd).transpose(0, 2, 1, 3, 4))
+    kp = k_pool.transpose(2, 0, 1, 3)                          # (Hkv,P,ps,hdw)
+    vp = v_pool.transpose(2, 0, 1, 3)
+    pt = jnp.asarray(page_table, jnp.int32)
+    lens = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1),
+                            (b,)).reshape(b, 1)
+    qpos = jnp.broadcast_to(jnp.asarray(q_pos, jnp.int32).reshape(-1),
+                            (b,)).reshape(b, 1)
+    vs = v_scale.astype(jnp.float32)
+    if geo.pb:
+        qb = jnp.pad(qb, ((0, geo.pb),) + ((0, 0),) * 4)
+        # pad rows: kv_len 1 / q_pos 0 (finite math) + all-sentinel page
+        # tables — they clip to the last pool page behind the length mask
+        lens = jnp.pad(lens, ((0, geo.pb), (0, 0)), constant_values=1)
+        qpos = jnp.pad(qpos, ((0, geo.pb), (0, 0)))
+        pt = jnp.pad(pt, ((0, geo.pb), (0, 0)), constant_values=p_pool)
+        vs = jnp.pad(vs, ((0, geo.pb), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_prefill_packed_paged_kernel, hd=hd, hdw=hdw,
+                          bq=bq, window=window, causal=causal),
+        grid=(geo.gb, hkv, geo.gs),
+        in_specs=[
+            pl.BlockSpec((bb, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((bb, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((bb, np_), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((bb, 1, bq, g, hdw),
+                         lambda i, j, k: (i, j, k, 0, 0)),
+            pl.BlockSpec((1, p_pool, ps, hdw), lambda i, j, k: (j, 0, 0, 0)),
+            pl.BlockSpec((1, p_pool, ps, hdw), lambda i, j, k: (j, 0, 0, 0)),
+            pl.BlockSpec((bb, 1), lambda i, j, k: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, 1, bq, g, hd),
+                               lambda i, j, k: (i, j, k, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b + geo.pb, hkv, s_pad, g, hd),
+                                       jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel")),
+        interpret=interpret,
+    )(lens, qpos, pt, qb, kp, vp, vs)
     out = out[:b].transpose(0, 2, 1, 3, 4).reshape(b, s_pad, hkv * g, hd)
     return out[:, :s].astype(q.dtype)

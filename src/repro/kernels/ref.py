@@ -162,6 +162,49 @@ def prefill_attention_packed_ref(q: Array, k_packed: Array, v_packed: Array,
     return packed_masked_attention_ref(q, k_packed, v_packed, v_scale, valid)
 
 
+def gather_pages(pool: Array, page_table: Array) -> Array:
+    """Materialize a paged cache as its contiguous equivalent.
+
+    pool: (pool_pages, page_size, Hkv, d) — fixed-size KV pages shared by
+    every slot; page_table: (B, n_pages) int32 — each row maps a slot's
+    position range [i*page_size, (i+1)*page_size) to a pool page. Returns
+    (B, n_pages*page_size, Hkv, d). Unallocated table entries carry the
+    `pool_pages` sentinel: they clip to the last page here and the
+    garbage rows are masked by cache-length masks downstream (exactly the
+    t >= kv_len convention of the contiguous kernels), so paged attention
+    == contiguous attention on the gathered panel, bit for bit."""
+    p = pool.shape[0]
+    b, np_ = page_table.shape
+    idx = jnp.minimum(page_table, p - 1).reshape(-1)
+    g = jnp.take(pool, idx, axis=0, mode="clip")
+    return g.reshape((b, np_ * pool.shape[1]) + pool.shape[2:])
+
+
+def decode_attention_packed_paged_ref(q: Array, k_pool: Array, v_pool: Array,
+                                      v_scale: Array, page_table: Array,
+                                      cache_len: Array, *,
+                                      window: int = 0) -> Array:
+    """Oracle for kernels.decode_attention.decode_attention_packed_paged:
+    gather the page-table rows into a contiguous (B, T, Hkv, hdw) panel,
+    then the contiguous decode oracle verbatim — the paged kernel is a
+    pure addressing change, never a numerics change."""
+    return decode_attention_packed_ref(
+        q, gather_pages(k_pool, page_table), gather_pages(v_pool, page_table),
+        v_scale, cache_len, window=window)
+
+
+def prefill_attention_packed_paged_ref(q: Array, k_pool: Array, v_pool: Array,
+                                       v_scale: Array, page_table: Array,
+                                       kv_len: Array, q_pos: Array, *,
+                                       window: int = 0,
+                                       causal: bool = True) -> Array:
+    """Oracle for kernels.prefill_attention.prefill_attention_packed_paged
+    (gather + the contiguous chunk oracle verbatim)."""
+    return prefill_attention_packed_ref(
+        q, gather_pages(k_pool, page_table), gather_pages(v_pool, page_table),
+        v_scale, kv_len, q_pos, window=window, causal=causal)
+
+
 def binary_conv2d_ref(x: Array, w: Array) -> Array:
     """Oracle for ops.binary_conv2d: conv(sign(x), sign(w)) with SAME-size
     output and +1-valued border padding (binarized padding convention —

@@ -29,7 +29,8 @@ bytes/flops bound.
 
 Route vocabulary (see kernels/binary_gemm.py for semantics):
     binary_gemm / binary_gemm_fused:  vpu | mxu | xla | float
-    decode_attention / prefill_attention:  pallas | xla
+    decode_attention / prefill_attention (and their _paged twins, which
+    walk a page table over a shared pool):  pallas | xla
 
 Why 'xla' exists: the oracle *is* a packed-arithmetic formulation; on
 hosts where Pallas kernels run in interpret mode (CPU CI), letting XLA
@@ -60,9 +61,10 @@ import numpy as np
 TUNED_DIR = Path(__file__).resolve().parent / "tuned"
 
 # Size-like dims get pow2-bucketed; everything else is structural and kept
-# exact in the key (a GQA group or head_dim changes the kernel's inner
-# shape, not just its extent).
-_BUCKETED = {"m", "n", "kw", "b", "t", "s"}
+# exact in the key (a GQA group, head_dim or page size changes the
+# kernel's inner shape, not just its extent). The paged attention pool
+# size `p` is size-like; the page size `ps` is structural.
+_BUCKETED = {"m", "n", "kw", "b", "t", "s", "p"}
 
 # Candidate block lattices. Kept deliberately small: every entry is also a
 # property-test case (tests must hold bit-exactness for anything the tuner
@@ -119,6 +121,17 @@ STANDARD_SHAPES: dict[str, list[dict[str, int]]] = {
         dict(b=4, s=8, t=128, hkv=2, g=4, hd=64),
         dict(b=8, s=16, t=512, hkv=2, g=4, hd=64),
     ],
+    # paged twins: same attention shapes addressed through a page table
+    # over a shared pool (p pages of ps tokens, t = pages-per-slot * ps)
+    "decode_attention_paged": [
+        dict(b=4, t=16, ps=4, p=16, hkv=2, g=2, hd=16),
+        dict(b=8, t=128, ps=8, p=128, hkv=2, g=4, hd=64),
+        dict(b=8, t=512, ps=8, p=512, hkv=2, g=4, hd=64),
+    ],
+    "prefill_attention_paged": [
+        dict(b=4, s=8, t=16, ps=4, p=16, hkv=2, g=2, hd=16),
+        dict(b=4, s=8, t=128, ps=8, p=128, hkv=2, g=4, hd=64),
+    ],
 }
 
 
@@ -171,9 +184,9 @@ def _heuristic(kernel: str, shape: dict[str, int]) -> tuple[str, dict]:
         return "vpu", dict(GEMM_TILES[0])
     if kernel == "binary_gemm_fused":
         return "vpu", dict(FUSED_TILES[0])
-    if kernel == "decode_attention":
+    if kernel in ("decode_attention", "decode_attention_paged"):
         return "pallas", {"block_b": 1}
-    if kernel == "prefill_attention":
+    if kernel in ("prefill_attention", "prefill_attention_paged"):
         return "pallas", {"block_q": 8, "block_b": 1}
     raise ValueError(f"unknown kernel: {kernel}")
 
@@ -217,11 +230,11 @@ def candidates(kernel: str, shape: dict[str, int]) -> list[tuple[str, dict]]:
     elif kernel == "binary_gemm_fused":
         cands = [("xla", {}), ("float", {})]
         cands += [("vpu", dict(t)) for t in FUSED_TILES]
-    elif kernel == "decode_attention":
+    elif kernel in ("decode_attention", "decode_attention_paged"):
         cands = [("xla", {})]
         cands += [("pallas", {"block_b": bb}) for bb in DECODE_BLOCK_B
                   if bb <= shape["b"]]
-    elif kernel == "prefill_attention":
+    elif kernel in ("prefill_attention", "prefill_attention_paged"):
         cands = [("xla", {})]
         cands += [("pallas", dict(p)) for p in PREFILL_BLOCKS
                   if p["block_b"] <= shape["b"]]
@@ -322,6 +335,41 @@ def _problem(kernel: str, shape: dict[str, int]):
         make = lambda route, p: (
             lambda *a: prefill_attention.prefill_attention_packed(
                 *a, route=route, **p))
+        return args, oracle, make
+    if kernel in ("decode_attention_paged", "prefill_attention_paged"):
+        decode = kernel == "decode_attention_paged"
+        b, ps, hkv, g, hd = (shape[x] for x in ("b", "ps", "hkv", "g", "hd"))
+        np_ = max(1, shape["t"] // ps)
+        t = np_ * ps
+        p_pool = max(shape["p"], b * np_)
+        s = 1 if decode else shape["s"]
+        q = jax.random.normal(ks[0], (b, s, hkv * g, hd))
+        kf = jax.random.normal(ks[1], (b, t, hkv, hd))
+        vf = jax.random.normal(ks[2], (b, t, hkv, hd))
+        kp, vp = pack_bits(kf), pack_bits(vf)
+        hdw = kp.shape[-1]
+        # scatter the contiguous cache into a shuffled pool: the kernels
+        # must pay the real gather indirection the tuner is timing
+        perm = jax.random.permutation(
+            ks[4], p_pool)[:b * np_].reshape(b, np_).astype(jnp.int32)
+        k_pool = jnp.zeros((p_pool, ps, hkv, hdw), jnp.uint32) \
+            .at[perm.reshape(-1)].set(kp.reshape(b * np_, ps, hkv, hdw))
+        v_pool = jnp.zeros((p_pool, ps, hkv, hdw), jnp.uint32) \
+            .at[perm.reshape(-1)].set(vp.reshape(b * np_, ps, hkv, hdw))
+        vs = decode_attention.v_cache_scale(vf)
+        lens = jax.random.randint(ks[3], (b,), s, t + 1)
+        if decode:
+            args = (q, k_pool, v_pool, vs, perm, lens)
+            oracle = lambda *a: ref.decode_attention_packed_paged_ref(*a)
+            make = lambda route, p: (
+                lambda *a: decode_attention.decode_attention_packed_paged(
+                    *a, route=route, **p))
+        else:
+            args = (q, k_pool, v_pool, vs, perm, lens, lens - s)
+            oracle = lambda *a: ref.prefill_attention_packed_paged_ref(*a)
+            make = lambda route, p: (
+                lambda *a: prefill_attention.prefill_attention_packed_paged(
+                    *a, route=route, **p))
         return args, oracle, make
     raise ValueError(f"unknown kernel: {kernel}")
 

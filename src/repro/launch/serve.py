@@ -41,6 +41,18 @@ def main() -> None:
                          "slot cache in fixed-shape chunks of this many "
                          "tokens, interleaved with decode bursts (0 = "
                          "whole-prompt admission)")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="paged KV cache: fixed pages of this many tokens "
+                         "in a shared refcounted pool, addressed through "
+                         "per-slot page tables (0 = contiguous slot cache; "
+                         "attention families, needs --prefill-chunk)")
+    ap.add_argument("--pool-pages", type=int, default=0,
+                    help="page-pool size (0 = slots * pages-per-slot)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix-tree prefix cache over full KV pages: "
+                         "requests sharing a prompt prefix pin the same "
+                         "pages zero-copy and prefill only their unseen "
+                         "suffix (needs --page-size)")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="requests/second Poisson arrivals in --queue mode "
                          "(0 = submit everything upfront)")
@@ -69,7 +81,10 @@ def main() -> None:
                         max_len=args.prompt_len + args.max_new + 1,
                         freeze=args.freeze, slots=args.slots, seed=args.seed,
                         kv_bits=args.kv_bits,
-                        prefill_chunk=args.prefill_chunk or None)
+                        prefill_chunk=args.prefill_chunk or None,
+                        page_size=args.page_size or None,
+                        pool_pages=args.pool_pages or None,
+                        prefix_cache=args.prefix_cache)
     if eng.frozen:
         rb = eng.resident_weight_bytes()
         total = rb["binary"] + rb["other"]
@@ -83,6 +98,14 @@ def main() -> None:
               f"packed bitplanes (kv_bits={eng.cfg.kv_bits}) + "
               f"{cb['float']/1e6:.3f} MB float (fp K/V, V scales, recurrent "
               f"state)")
+        pp = cb.get("page_pool")
+        if pp is None and eng.page_size:
+            pp = eng.scheduler().page_stats()
+        if pp:
+            pinned = pp.get("pinned_by_prefix", 0)
+            print(f"page pool: {pp['pages']} pages x {pp['page_size']} "
+                  f"tokens = {pp['allocated']} allocated "
+                  f"({pinned} pinned by prefix tree) + {pp['free']} free")
         for name, (route, params) in eng.kernel_routes().items():
             extra = f" {params}" if params else ""
             print(f"kernel route {name}: {route}{extra}")
@@ -161,6 +184,17 @@ def _serve_queue(eng, cfg, rng, args) -> None:
           f"decode {sched.stats['decode_s']:.3f}s | "
           f"chunked admission: {sched.prefill_chunk or 'off'} "
           f"({sched.prefill_shape_count} prefill shapes compiled)")
+    ps = sched.page_stats()
+    if ps is not None:
+        line = (f"page pool: {ps['allocated']}/{ps['pages']} pages "
+                f"allocated ({ps.get('pinned_by_prefix', 0)} pinned by "
+                f"prefix tree)")
+        tree = ps.get("prefix_tree")
+        if tree is not None:
+            line += (f" | prefix cache: {tree['hits']}/{tree['lookups']} "
+                     f"hits, {sched.stats['prefill_tokens_saved']} prompt "
+                     f"tokens served zero-copy, {tree['evicted']} evicted")
+        print(line)
 
 
 if __name__ == "__main__":

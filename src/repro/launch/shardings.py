@@ -132,6 +132,11 @@ def cache_shardings(mesh, cache_sds, family: str,
     from repro.launch.mesh import batch_axes
     ba = batch_axes(mesh) if global_batch is None \
         else div_batch_axes(mesh, global_batch)
+    # paged layout (page_size= at init_cache): self K/V are a shared page
+    # pool with NO batch axis — slots address it through the page_table
+    paged = any(
+        _path_str(p).endswith("page_table")
+        for p, _ in jax.tree_util.tree_flatten_with_path(cache_sds)[0])
 
     def one(path, leaf):
         name = _path_str(path)
@@ -143,6 +148,18 @@ def cache_shardings(mesh, cache_sds, family: str,
             spec[-2] = ba
             return NamedSharding(mesh, P(*spec))
         packed_kv = leaf.dtype == jnp.uint32
+        if name.endswith("page_table"):
+            return NamedSharding(mesh, P(ba, None))   # (B, n_pages)
+        if paged and family in ("dense", "moe", "audio", "vlm") and \
+                (name.endswith("k") or name.endswith("v")) and \
+                not name.endswith("xk") and not name.endswith("xv"):
+            # pool leaf (..., pool, page, kv, hd|w): every slot reaches
+            # every page, so the pool axis replicates; 'model' still
+            # splits head_dim for the float layout
+            spec = [None] * nd
+            if not packed_kv:
+                spec[-1] = "model"
+            return NamedSharding(mesh, P(*spec))
         if family in ("dense", "moe", "audio", "vlm"):
             # (..., B, T, kv, hd): batch at -4; 'model' on head_dim (the kv
             # head count (1-32) need not divide the model axis, hd does).

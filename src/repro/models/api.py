@@ -93,7 +93,8 @@ def get_model(cfg: ModelConfig) -> Model:
                 p, cfg, tokens, **kw),
             decode=lambda p, token, cache, pos: T.transformer_decode(
                 p, cfg, token, cache, pos),
-            init_cache=lambda batch, max_len: T.init_cache(cfg, batch, max_len),
+            init_cache=lambda batch, max_len, **kw: T.init_cache(
+                cfg, batch, max_len, **kw),
             prefill_chunk=lambda p, tokens, cache, slot, pos, n_valid, **kw:
                 T.transformer_prefill_chunk(p, cfg, tokens, cache, slot, pos,
                                             n_valid, **kw),
@@ -110,7 +111,8 @@ def get_model(cfg: ModelConfig) -> Model:
             prefill=lambda p, tokens, **kw: ssm_lm.mamba_prefill(p, cfg, tokens),
             decode=lambda p, token, cache, pos: ssm_lm.mamba_decode(
                 p, cfg, token, cache, pos),
-            init_cache=lambda batch, max_len: ssm_lm.mamba_init_state(cfg, batch),
+            init_cache=lambda batch, max_len, **kw: ssm_lm.mamba_init_state(
+                cfg, batch),
             prefill_chunk=lambda p, tokens, cache, slot, pos, n_valid, **kw:
                 ssm_lm.mamba_prefill_chunk(p, cfg, tokens, cache, slot, pos,
                                            n_valid),
@@ -127,7 +129,8 @@ def get_model(cfg: ModelConfig) -> Model:
             prefill=lambda p, tokens, **kw: ssm_lm.rg_prefill(p, cfg, tokens),
             decode=lambda p, token, cache, pos: ssm_lm.rg_decode(
                 p, cfg, token, cache, pos),
-            init_cache=lambda batch, max_len: ssm_lm.rg_init_state(cfg, batch),
+            init_cache=lambda batch, max_len, **kw: ssm_lm.rg_init_state(
+                cfg, batch),
             prefill_chunk=lambda p, tokens, cache, slot, pos, n_valid, **kw:
                 ssm_lm.rg_prefill_chunk(p, cfg, tokens, cache, slot, pos,
                                         n_valid),
@@ -139,7 +142,13 @@ def param_count(params) -> int:
     return sum(int(jnp.size(x)) for x in jax.tree.leaves(params))
 
 
-def cache_batch_axes(model: Model, max_len: int):
+# descriptor for cache leaves with no per-slot batch axis (the shared K/V
+# page pools of a paged cache): slot insert/reset skips them — their rows
+# are addressed through the page_table leaf, which DOES carry a batch axis
+PAGED = "paged"
+
+
+def cache_batch_axes(model: Model, max_len: int, **cache_kw):
     """Pytree of ints: which axis of each cache leaf is the batch axis.
 
     Cache layouts differ per family (layer-major KV, grouped VLM caches,
@@ -147,12 +156,24 @@ def cache_batch_axes(model: Model, max_len: int):
     it is the one axis on which a 1-slot and a 2-slot cache disagree.
     Used by the serving scheduler to write a freshly prefilled request's
     cache/state rows into its slot of the shared batch cache.
+
+    `cache_kw` forwards paged-layout args (page_size / pool_pages) to
+    `init_cache`. A paged cache's K/V pools are shared by every slot —
+    their shapes don't depend on the slot count at all (the probe pins
+    pool_pages so the default batch-derived sizing can't fake a batch
+    axis) — and those leaves get the `PAGED` descriptor instead of an
+    axis: per-slot state moves through the page_table row, never by
+    copying pool rows.
     """
-    c1 = jax.eval_shape(lambda: model.init_cache(1, max_len))
-    c2 = jax.eval_shape(lambda: model.init_cache(2, max_len))
+    if cache_kw.get("page_size") is not None:
+        cache_kw = dict(cache_kw, pool_pages=cache_kw.get("pool_pages") or 8)
+    c1 = jax.eval_shape(lambda: model.init_cache(1, max_len, **cache_kw))
+    c2 = jax.eval_shape(lambda: model.init_cache(2, max_len, **cache_kw))
 
     def axis(a, b):
         diff = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
+        if not diff:
+            return PAGED            # slot-count-independent pool leaf
         assert len(diff) == 1, f"ambiguous batch axis: {a.shape} vs {b.shape}"
         return diff[0]
 

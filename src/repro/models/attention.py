@@ -19,14 +19,18 @@ import jax.numpy as jnp
 # Re-exported here so model code imports every attention flavor from one
 # module (and tests can swap in kernels.ref.decode_attention_packed_ref).
 from repro.kernels.decode_attention import (
-    decode_attention_packed, v_cache_scale,
+    decode_attention_packed, decode_attention_packed_paged, v_cache_scale,
 )
-from repro.kernels.prefill_attention import prefill_attention_packed
-from repro.kernels.ref import chunk_valid_mask
+from repro.kernels.prefill_attention import (
+    prefill_attention_packed, prefill_attention_packed_paged,
+)
+from repro.kernels.ref import chunk_valid_mask, gather_pages
 
-__all__ = ["attention_ref", "chunk_attention", "decode_attention",
-           "decode_attention_packed", "flash_attention",
-           "masked_chunk_attention", "prefill_attention_packed",
+__all__ = ["attention_ref", "chunk_attention", "chunk_attention_paged",
+           "decode_attention", "decode_attention_packed",
+           "decode_attention_packed_paged", "decode_attention_paged",
+           "flash_attention", "masked_chunk_attention",
+           "prefill_attention_packed", "prefill_attention_packed_paged",
            "v_cache_scale"]
 
 Array = jax.Array
@@ -229,6 +233,19 @@ def chunk_attention(q: Array, k_cache: Array, v_cache: Array,
     return masked_chunk_attention(q, k_cache, v_cache, valid)
 
 
+def chunk_attention_paged(q: Array, k_pool: Array, v_pool: Array,
+                          page_table: Array, kv_len: Array, q_pos: Array, *,
+                          window: int = 0, causal: bool = True) -> Array:
+    """`chunk_attention` against a *paged* float cache (kv_bits=0 serving
+    over the page pool): gather the slot's pages into the contiguous
+    (B, NP*ps, Hkv, d) panel, then the contiguous op sequence verbatim —
+    paging never changes numerics. k_pool/v_pool: (P, ps, Hkv, d);
+    page_table: (B, NP) int32 with == P the unallocated sentinel."""
+    return chunk_attention(q, gather_pages(k_pool, page_table),
+                           gather_pages(v_pool, page_table), kv_len, q_pos,
+                           window=window, causal=causal)
+
+
 def decode_attention(q: Array, k_cache: Array, v_cache: Array,
                      cache_len: Array, *, window: int = 0) -> Array:
     """Single-token decode attention against a cache.
@@ -254,3 +271,13 @@ def decode_attention(q: Array, k_cache: Array, v_cache: Array,
     p = jax.nn.softmax(sc, axis=-1)
     out = jnp.einsum("bhgt,bthd->bhgd", p, vf)
     return out.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+def decode_attention_paged(q: Array, k_pool: Array, v_pool: Array,
+                           page_table: Array, cache_len: Array, *,
+                           window: int = 0) -> Array:
+    """`decode_attention` against a *paged* float cache (gather + the
+    contiguous op sequence verbatim; see `chunk_attention_paged`)."""
+    return decode_attention(q, gather_pages(k_pool, page_table),
+                            gather_pages(v_pool, page_table), cache_len,
+                            window=window)

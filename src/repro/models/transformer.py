@@ -28,8 +28,10 @@ from repro.configs.base import ModelConfig
 from repro.core.bitpack import pack_bits, packed_width
 from repro.core.layers import QuantMode, qmatmul, shared_pack
 from repro.models.attention import (
-    chunk_attention, decode_attention, decode_attention_packed,
-    flash_attention, prefill_attention_packed, v_cache_scale,
+    chunk_attention, chunk_attention_paged, decode_attention,
+    decode_attention_packed, decode_attention_packed_paged,
+    decode_attention_paged, flash_attention, prefill_attention_packed,
+    prefill_attention_packed_paged, v_cache_scale,
 )
 from repro.launch.shardctx import (hint_attn_q, hint_ffn_hidden, hint_gathered, hint_residual)
 from repro.models.common import (
@@ -322,35 +324,64 @@ def transformer_loss(params: dict, cfg: ModelConfig, batch: dict, *,
 # ---------------------------------------------------------------------------
 # Serving: prefill + decode with KV cache
 # ---------------------------------------------------------------------------
-def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+               page_size: int | None = None,
+               pool_pages: int | None = None) -> dict:
     """KV cache skeleton. kv_bits=0: float K/V in the activation dtype.
     kv_bits=1 (bit-resident serving): K/V are sign bitplanes — uint32 words
     packed along head_dim (`ceil(hd/32)` per position, the kernel wire
     format) — plus a per-(row, kv-head) fp32 V scale fixed at prefill.
     Packed caches are plain uint32 leaves, so `cache_batch_axes` and the
-    scheduler's slot insertion work on them unchanged."""
+    scheduler's slot insertion work on them unchanged.
+
+    `page_size` switches the K/V leaves to the *paged* layout: instead of
+    one contiguous (batch, max_len, ...) panel per slot, K/V live in a
+    pool of `pool_pages` fixed-size pages (default: exactly enough for
+    every slot at max_len) shared by every layer — one logical page id
+    addresses the same pool row in each layer — and a `page_table`
+    (batch, ceil(max_len/page_size)) int32 leaf maps each slot's position
+    ranges to pool pages (entries == pool_pages are the unallocated
+    sentinel). The host-side owner of that table is serving.pager /
+    serving.prefix_cache; v_scale and the vlm cross-attn xk/xv (computed
+    once per request from image tokens) stay slot-resident."""
     packed = cfg.kv_bits == 1
     dt = cfg.activation_dtype
     kv, hd = cfg.n_kv_heads, cfg.head_dim
     kvdt = jnp.uint32 if packed else dt
     w = packed_width(hd) if packed else hd
+    paged = page_size is not None
+    if paged:
+        np_ = -(-max_len // page_size)
+        pool = pool_pages if pool_pages is not None else batch * np_
     if cfg.family == "vlm":
         g = cfg.n_layers // cfg.xattn_group
         p_self = cfg.xattn_group - 1
-        cache = {
-            "k": jnp.zeros((g, p_self, batch, max_len, kv, w), kvdt),
-            "v": jnp.zeros((g, p_self, batch, max_len, kv, w), kvdt),
-            # cross-attn KV is computed once from image tokens at prefill
-            "xk": jnp.zeros((g, batch, cfg.n_img_tokens, kv, w), kvdt),
-            "xv": jnp.zeros((g, batch, cfg.n_img_tokens, kv, w), kvdt),
-        }
+        if paged:
+            cache = {
+                "k": jnp.zeros((g, p_self, pool, page_size, kv, w), kvdt),
+                "v": jnp.zeros((g, p_self, pool, page_size, kv, w), kvdt),
+                "page_table": jnp.full((batch, np_), pool, jnp.int32),
+            }
+        else:
+            cache = {
+                "k": jnp.zeros((g, p_self, batch, max_len, kv, w), kvdt),
+                "v": jnp.zeros((g, p_self, batch, max_len, kv, w), kvdt),
+            }
+        # cross-attn KV is computed once from image tokens at prefill
+        cache["xk"] = jnp.zeros((g, batch, cfg.n_img_tokens, kv, w), kvdt)
+        cache["xv"] = jnp.zeros((g, batch, cfg.n_img_tokens, kv, w), kvdt)
         if packed:
             cache["v_scale"] = jnp.zeros((g, p_self, batch, kv), jnp.float32)
             cache["xv_scale"] = jnp.zeros((g, batch, kv), jnp.float32)
         return cache
     n = cfg.n_layers
-    cache = {"k": jnp.zeros((n, batch, max_len, kv, w), kvdt),
-             "v": jnp.zeros((n, batch, max_len, kv, w), kvdt)}
+    if paged:
+        cache = {"k": jnp.zeros((n, pool, page_size, kv, w), kvdt),
+                 "v": jnp.zeros((n, pool, page_size, kv, w), kvdt),
+                 "page_table": jnp.full((batch, np_), pool, jnp.int32)}
+    else:
+        cache = {"k": jnp.zeros((n, batch, max_len, kv, w), kvdt),
+                 "v": jnp.zeros((n, batch, max_len, kv, w), kvdt)}
     if packed:
         cache["v_scale"] = jnp.zeros((n, batch, kv), jnp.float32)
     return cache
@@ -434,7 +465,8 @@ def transformer_prefill(params: dict, cfg: ModelConfig, tokens: Array, *,
     return logits, cache
 
 
-def _decode_self_block(bp, h, kc, vc, cfg, mode, pos, window, v_scale=None):
+def _decode_self_block(bp, h, kc, vc, cfg, mode, pos, window, v_scale=None,
+                       pt=None):
     """One-token self-attn block against cache. h: (B,1,D); pos: (B,) —
     each row writes its KV at its own position and masks from its own
     length (rows of a continuous-batching slot batch sit at different
@@ -444,9 +476,16 @@ def _decode_self_block(bp, h, kc, vc, cfg, mode, pos, window, v_scale=None):
     cannot corrupt a partially prefilled row. kv_bits=1: the new K/V row
     is sign-packed before the write and attention runs on the uint32
     bitplanes (XNOR+popcount scores, per-head `v_scale` V accumulation)
-    — float K/V never touch the cache."""
+    — float K/V never touch the cache.
+
+    `pt` (B, NP) int32 switches to the paged layout: kc/vc are page pools
+    (P, ps, kv, ·), the write position pos maps through the slot's page
+    table (page pt[b, pos//ps], row pos%ps — the scheduler pre-allocates
+    every page a request can reach at admission, so active rows always
+    hit a real page), and attention walks the table in the paged kernels.
+    Inactive rows write at the pool-size sentinel and drop, exactly like
+    the contiguous t_max convention."""
     b = h.shape[0]
-    t_max = kc.shape[1]
     xn = _norm(bp["ln1"], h, cfg)
     q, k_new, v_new = _qkv(bp["attn"], xn, cfg, mode, False, None)
     if cfg.pos == "rope":
@@ -454,16 +493,38 @@ def _decode_self_block(bp, h, kc, vc, cfg, mode, pos, window, v_scale=None):
         q = rope(q, positions, cfg.rope_theta)
         k_new = rope(k_new, positions, cfg.rope_theta)
     rows = jnp.arange(b)
-    wpos = jnp.where(pos >= 0, pos, t_max)                     # inactive: drop
-    if cfg.kv_bits == 1:
-        kc = kc.at[rows, wpos].set(pack_bits(k_new[:, 0]), mode="drop")
-        vc = vc.at[rows, wpos].set(pack_bits(v_new[:, 0]), mode="drop")
-        out = decode_attention_packed(q, kc, vc, v_scale, pos + 1,
-                                      window=window)
+    if pt is not None:
+        p_pool, ps = kc.shape[0], kc.shape[1]
+        posc = jnp.maximum(pos, 0)
+        pidx = jnp.clip(posc // ps, 0, pt.shape[1] - 1)
+        wpage = jnp.where(pos >= 0, pt[rows, pidx], p_pool)    # inactive: drop
+        wrow = posc % ps
+        if cfg.kv_bits == 1:
+            kc = kc.at[wpage, wrow].set(pack_bits(k_new[:, 0]), mode="drop")
+            vc = vc.at[wpage, wrow].set(pack_bits(v_new[:, 0]), mode="drop")
+            out = decode_attention_packed_paged(q, kc, vc, v_scale, pt,
+                                                pos + 1, window=window)
+        else:
+            kc = kc.at[wpage, wrow].set(k_new[:, 0].astype(kc.dtype),
+                                        mode="drop")
+            vc = vc.at[wpage, wrow].set(v_new[:, 0].astype(vc.dtype),
+                                        mode="drop")
+            out = decode_attention_paged(q, kc, vc, pt, pos + 1,
+                                         window=window)
     else:
-        kc = kc.at[rows, wpos].set(k_new[:, 0].astype(kc.dtype), mode="drop")
-        vc = vc.at[rows, wpos].set(v_new[:, 0].astype(vc.dtype), mode="drop")
-        out = decode_attention(q, kc, vc, pos + 1, window=window)
+        t_max = kc.shape[1]
+        wpos = jnp.where(pos >= 0, pos, t_max)                 # inactive: drop
+        if cfg.kv_bits == 1:
+            kc = kc.at[rows, wpos].set(pack_bits(k_new[:, 0]), mode="drop")
+            vc = vc.at[rows, wpos].set(pack_bits(v_new[:, 0]), mode="drop")
+            out = decode_attention_packed(q, kc, vc, v_scale, pos + 1,
+                                          window=window)
+        else:
+            kc = kc.at[rows, wpos].set(k_new[:, 0].astype(kc.dtype),
+                                       mode="drop")
+            vc = vc.at[rows, wpos].set(v_new[:, 0].astype(vc.dtype),
+                                       mode="drop")
+            out = decode_attention(q, kc, vc, pos + 1, window=window)
     out = out.reshape(b, 1, cfg.n_heads * cfg.head_dim)
     h = h + qmatmul(out, bp["attn"]["wo"], mode)
     h, _ = ffn_sublayer(bp, h, cfg, mode, train=False, key=None)
@@ -486,6 +547,9 @@ def transformer_decode(params: dict, cfg: ModelConfig, token: Array,
         pe = sinusoidal_pos(pos, cfg.d_model)                  # (B, d)
         h = h + pe[:, None].astype(h.dtype)
     window = cfg.local_window
+    # paged layout: one page table shared by every layer (closure, not a
+    # scanned leaf — each layer's pool row is addressed by the same ids)
+    pt = cache.get("page_table")
 
     if cfg.family == "vlm":
         def group_body(h, xs):
@@ -510,7 +574,8 @@ def transformer_decode(params: dict, cfg: ModelConfig, token: Array,
             def self_body(h2, xs2):
                 sp, kc, vc, vs = ((*xs2, None) if not packed else xs2)
                 h2, kc, vc = _decode_self_block(sp, h2, kc, vc, cfg, mode,
-                                                pos, window, v_scale=vs)
+                                                pos, window, v_scale=vs,
+                                                pt=pt)
                 return h2, (kc, vc)
 
             self_xs = (gp["self"], kcs, vcs) + ((vss,) if packed else ())
@@ -527,7 +592,7 @@ def transformer_decode(params: dict, cfg: ModelConfig, token: Array,
         def block_body(h, xs):
             bp, kc, vc, vs = ((*xs, None) if not packed else xs)
             h, kc, vc = _decode_self_block(bp, h, kc, vc, cfg, mode, pos,
-                                           window, v_scale=vs)
+                                           window, v_scale=vs, pt=pt)
             return h, (kc, vc)
 
         block_xs = (params["blocks"], cache["k"], cache["v"]) + \
@@ -543,7 +608,7 @@ def transformer_decode(params: dict, cfg: ModelConfig, token: Array,
 # Chunked prefill: advance one slot's prompt by one fixed-shape chunk
 # ---------------------------------------------------------------------------
 def _chunk_self_block(bp, h, kc, vc, vs, cfg, mode, positions, widx, kv_len,
-                      pos, n_valid, window):
+                      pos, n_valid, window, pt_row=None):
     """One self-attn block over a prefill chunk against the slot's cache
     row. h: (1, C, D); kc/vc: (1, T, kv, hd|hdw); vs: (1, kv) running
     per-head V scale (kv_bits=1) or None. The chunk's K/V rows are written
@@ -552,14 +617,44 @@ def _chunk_self_block(bp, h, kc, vc, vs, cfg, mode, positions, widx, kv_len,
     triangle come out of the same cache panel. kv_bits=1: the write is a
     sign-pack, the V scale updates as a running mean over [0, kv_len), and
     attention is XOR+popcount over the uint32 bitplanes
-    (`prefill_attention_packed`) — float K/V never touch the cache."""
+    (`prefill_attention_packed`) — float K/V never touch the cache.
+
+    `pt_row` (NP,) int32 switches to the paged layout: kc/vc are page
+    pools (P, ps, kv, ·), chunk row i lands at page pt_row[positions[i]
+    // ps], row positions[i] % ps (pad rows write at the pool-size
+    sentinel and drop), and attention walks the table in the paged
+    kernels. The running V-scale update is layout-independent and shared
+    verbatim — which is what keeps paged prefill == contiguous prefill
+    bit-exact."""
     c = h.shape[1]
     xn = _norm(bp["ln1"], h, cfg)
     q, k_new, v_new = _qkv(bp["attn"], xn, cfg, mode, False, None)
     if cfg.pos == "rope":
         q = rope(q, positions, cfg.rope_theta)
         k_new = rope(k_new, positions, cfg.rope_theta)
-    if cfg.kv_bits == 1:
+    if pt_row is not None:
+        p_pool, ps = kc.shape[0], kc.shape[1]
+        pidx = jnp.clip(positions // ps, 0, pt_row.shape[0] - 1)
+        wpage = jnp.where(jnp.arange(c) < n_valid, pt_row[pidx], p_pool)
+        wrow = positions % ps
+        if cfg.kv_bits == 1:
+            kc = kc.at[wpage, wrow].set(pack_bits(k_new[0]), mode="drop")
+            vc = vc.at[wpage, wrow].set(pack_bits(v_new[0]), mode="drop")
+            absm = jnp.mean(jnp.abs(v_new[0].astype(jnp.float32)), axis=-1)
+            msk = (jnp.arange(c) < n_valid)[:, None]
+            vs = (vs * pos.astype(jnp.float32) +
+                  jnp.sum(absm * msk, axis=0)[None]) / \
+                kv_len.astype(jnp.float32)
+            out = prefill_attention_packed_paged(q, kc, vc, vs, pt_row[None],
+                                                 kv_len, pos, window=window)
+        else:
+            kc = kc.at[wpage, wrow].set(k_new[0].astype(kc.dtype),
+                                        mode="drop")
+            vc = vc.at[wpage, wrow].set(v_new[0].astype(vc.dtype),
+                                        mode="drop")
+            out = chunk_attention_paged(q, kc, vc, pt_row[None], kv_len, pos,
+                                        window=window)
+    elif cfg.kv_bits == 1:
         kc = kc.at[0, widx].set(pack_bits(k_new[0]), mode="drop")
         vc = vc.at[0, widx].set(pack_bits(v_new[0]), mode="drop")
         # running mean |v| over (positions so far, head_dim): equals the
@@ -619,10 +714,20 @@ def transformer_prefill_chunk(params: dict, cfg: ModelConfig, tokens: Array,
         return jax.lax.dynamic_update_slice_in_dim(x, rows.astype(x.dtype),
                                                    slot, axis=ax)
 
+    # paged layout: the K/V pools are shared by every slot, so they scan
+    # through whole (never dsliced per slot) and the slot's page-table row
+    # directs the writes; vlm xk/xv and the V scales stay slot-resident
+    paged = "page_table" in cache
+    pt_row = dslice(cache["page_table"], 0)[0] if paged else None  # (NP,)
+
     if cfg.family == "vlm":
-        t_max = cache["k"].shape[3]
-        widx = jnp.where(idx < n_valid, positions, t_max)
-        kcs_all, vcs_all = dslice(cache["k"], 2), dslice(cache["v"], 2)
+        if paged:
+            widx = None
+            kcs_all, vcs_all = cache["k"], cache["v"]
+        else:
+            t_max = cache["k"].shape[3]
+            widx = jnp.where(idx < n_valid, positions, t_max)
+            kcs_all, vcs_all = dslice(cache["k"], 2), dslice(cache["v"], 2)
         xk_all, xv_all = dslice(cache["xk"], 1), dslice(cache["xv"], 1)
         group_xs = (params["groups"], kcs_all, vcs_all) + \
             ((dslice(cache["v_scale"], 2),) if packed else ()) + \
@@ -668,7 +773,7 @@ def transformer_prefill_chunk(params: dict, cfg: ModelConfig, tokens: Array,
                 sp, kc, vc, vs = ((*xs2, None) if not packed else xs2)
                 h2, kc, vc, vs = _chunk_self_block(
                     sp, h2, kc, vc, vs, cfg, mode, positions, widx, kv_len,
-                    pos, n_valid, window)
+                    pos, n_valid, window, pt_row=pt_row)
                 return h2, (kc, vc) + ((vs,) if packed else ())
 
             self_xs = (gp["self"], kcs, vcs) + ((vss,) if packed else ())
@@ -680,30 +785,41 @@ def transformer_prefill_chunk(params: dict, cfg: ModelConfig, tokens: Array,
             ks, vls, vss, xks, xvs_, xvss = ys
         else:
             ks, vls, xks, xvs_ = ys
-        new_cache = dict(cache, k=dput(cache["k"], ks, 2),
-                         v=dput(cache["v"], vls, 2),
-                         xk=dput(cache["xk"], xks, 1),
-                         xv=dput(cache["xv"], xvs_, 1))
+        if paged:
+            new_cache = dict(cache, k=ks, v=vls)
+        else:
+            new_cache = dict(cache, k=dput(cache["k"], ks, 2),
+                             v=dput(cache["v"], vls, 2))
+        new_cache["xk"] = dput(cache["xk"], xks, 1)
+        new_cache["xv"] = dput(cache["xv"], xvs_, 1)
         if packed:
             new_cache["v_scale"] = dput(cache["v_scale"], vss, 2)
             new_cache["xv_scale"] = dput(cache["xv_scale"], xvss, 1)
     else:
-        t_max = cache["k"].shape[2]
-        widx = jnp.where(idx < n_valid, positions, t_max)
-        block_xs = (params["blocks"], dslice(cache["k"], 1),
-                    dslice(cache["v"], 1)) + \
-            ((dslice(cache["v_scale"], 1),) if packed else ())
+        if paged:
+            widx = None
+            block_xs = (params["blocks"], cache["k"], cache["v"]) + \
+                ((dslice(cache["v_scale"], 1),) if packed else ())
+        else:
+            t_max = cache["k"].shape[2]
+            widx = jnp.where(idx < n_valid, positions, t_max)
+            block_xs = (params["blocks"], dslice(cache["k"], 1),
+                        dslice(cache["v"], 1)) + \
+                ((dslice(cache["v_scale"], 1),) if packed else ())
 
         def block_body(h, xs):
             bp, kc, vc, vs = ((*xs, None) if not packed else xs)
             h, kc, vc, vs = _chunk_self_block(
                 bp, h, kc, vc, vs, cfg, mode, positions, widx, kv_len, pos,
-                n_valid, window)
+                n_valid, window, pt_row=pt_row)
             return h, (kc, vc) + ((vs,) if packed else ())
 
         h, st = jax.lax.scan(block_body, h, block_xs)
-        new_cache = dict(cache, k=dput(cache["k"], st[0], 1),
-                         v=dput(cache["v"], st[1], 1))
+        if paged:
+            new_cache = dict(cache, k=st[0], v=st[1])
+        else:
+            new_cache = dict(cache, k=dput(cache["k"], st[0], 1),
+                             v=dput(cache["v"], st[1], 1))
         if packed:
             new_cache["v_scale"] = dput(cache["v_scale"], st[2], 1)
 

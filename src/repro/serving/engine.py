@@ -34,6 +34,14 @@ cache shrinks ~32x and with it the bytes every decode step must read,
 which is what bounds decode at serving scale. `resident_cache_bytes()`
 reports the split the same way `resident_weight_bytes()` does for
 weights.
+
+Pass `page_size=P` (attention families, with `prefill_chunk`) to replace
+the contiguous per-slot cache with the paged layout: K/V pages in a
+shared refcounted pool addressed through per-slot page tables
+(`serving.pager`), and `prefix_cache=True` to share identical prompt
+prefixes across requests zero-copy through a radix tree over full pages
+(`serving.prefix_cache`) — admission pins matched pages into the new
+slot's table and prefills only the unseen suffix.
 """
 from __future__ import annotations
 
@@ -56,7 +64,8 @@ class ServingEngine:
                  mesh=None, freeze: bool = False, slots: int = 4,
                  seed: int = 0, kv_bits: int | None = None,
                  prefill_chunk: int | None = None,
-                 interleave_steps: int = 8):
+                 interleave_steps: int = 8, page_size: int | None = None,
+                 pool_pages: int | None = None, prefix_cache: bool = False):
         if kv_bits is not None:
             if kv_bits not in (0, 1):
                 raise ValueError(f"kv_bits must be 0 (float cache) or 1 "
@@ -70,6 +79,9 @@ class ServingEngine:
         self.slots = slots
         self.prefill_chunk = prefill_chunk
         self.interleave_steps = interleave_steps
+        self.page_size = page_size
+        self.pool_pages = pool_pages
+        self.prefix_cache = prefix_cache
         self.frozen = params_frozen(params)
         self._key = jax.random.PRNGKey(seed)
         self._sched: Scheduler | None = None
@@ -122,15 +134,33 @@ class ServingEngine:
         """Bytes of weights resident in memory, split binary vs other."""
         return resident_weight_bytes(self.params)
 
+    def _cache_kw(self) -> dict:
+        """init_cache kwargs for this engine's cache layout — paged for
+        the attention families when page_size is set (same default pool
+        sizing as the scheduler), empty (contiguous) otherwise."""
+        if self.page_size is None or \
+                self.cfg.family not in ("dense", "moe", "audio", "vlm"):
+            return {}
+        n_pages = -(-self.max_len // self.page_size)
+        return {"page_size": self.page_size,
+                "pool_pages": (self.pool_pages if self.pool_pages is not None
+                               else self.slots * n_pages)}
+
     def resident_cache_bytes(self) -> dict:
         """Bytes of KV cache / recurrent state resident for this engine's
         slot allocation (`slots` rows at `max_len`), split `packed` (uint32
         sign bitplanes, kv_bits=1) vs `float` (fp K/V, V scales, recurrent
         states). Family-aware by construction — it walks whatever leaves
-        this family's `init_cache` actually allocates. Computed from
-        abstract shapes; nothing is materialized."""
+        this family's `init_cache` actually allocates, so with `page_size`
+        set it reports the page-pool layout (pool K/V + page tables).
+        Computed from abstract shapes; nothing is materialized. With a
+        live paged scheduler, also merges the pool utilization split —
+        pages allocated to slots vs pinned only by the prefix tree vs
+        free (`page_stats`)."""
+        cache_kw = self._cache_kw()
         cache = jax.eval_shape(
-            lambda: self.model.init_cache(self.slots, self.max_len))
+            lambda: self.model.init_cache(self.slots, self.max_len,
+                                          **cache_kw))
         out = {"packed": 0, "float": 0}
         for leaf in jax.tree.leaves(cache):
             nbytes = int(np.prod(leaf.shape, dtype=np.int64)) * \
@@ -138,6 +168,10 @@ class ServingEngine:
             kind = "packed" if leaf.dtype == jnp.uint32 else "float"
             out[kind] += nbytes
         out["total"] = out["packed"] + out["float"]
+        if self._sched is not None:
+            ps = self._sched.page_stats()
+            if ps is not None:
+                out["page_pool"] = ps
         return out
 
     def kernel_routes(self) -> dict:
@@ -163,14 +197,32 @@ class ServingEngine:
                                        kw=packed_width(k), pl=pl)
         if cfg.n_kv_heads:
             g = max(1, cfg.n_heads // cfg.n_kv_heads)
-            out[f"decode_attention[b{m}_t{self.max_len}]"] = tune.get_route(
-                "decode_attention", b=m, t=self.max_len, hkv=cfg.n_kv_heads,
-                g=g, hd=cfg.head_dim)
-            if self.prefill_chunk:
-                out[f"prefill_attention[b{m}_s{self.prefill_chunk}"
-                    f"_t{self.max_len}]"] = tune.get_route(
-                    "prefill_attention", b=m, s=self.prefill_chunk,
-                    t=self.max_len, hkv=cfg.n_kv_heads, g=g, hd=cfg.head_dim)
+            paged = bool(self._cache_kw())
+            if paged:
+                ps = self.page_size
+                np_ = -(-self.max_len // ps)
+                pool = self._cache_kw()["pool_pages"]
+                out[f"decode_attention_paged[b{m}_t{np_ * ps}_ps{ps}]"] = \
+                    tune.get_route("decode_attention_paged", b=m,
+                                   t=np_ * ps, ps=ps, p=pool,
+                                   hkv=cfg.n_kv_heads, g=g, hd=cfg.head_dim)
+                if self.prefill_chunk:
+                    out[f"prefill_attention_paged[b{m}"
+                        f"_s{self.prefill_chunk}_t{np_ * ps}_ps{ps}]"] = \
+                        tune.get_route("prefill_attention_paged", b=m,
+                                       s=self.prefill_chunk, t=np_ * ps,
+                                       ps=ps, p=pool, hkv=cfg.n_kv_heads,
+                                       g=g, hd=cfg.head_dim)
+            else:
+                out[f"decode_attention[b{m}_t{self.max_len}]"] = \
+                    tune.get_route("decode_attention", b=m, t=self.max_len,
+                                   hkv=cfg.n_kv_heads, g=g, hd=cfg.head_dim)
+                if self.prefill_chunk:
+                    out[f"prefill_attention[b{m}_s{self.prefill_chunk}"
+                        f"_t{self.max_len}]"] = tune.get_route(
+                        "prefill_attention", b=m, s=self.prefill_chunk,
+                        t=self.max_len, hkv=cfg.n_kv_heads, g=g,
+                        hd=cfg.head_dim)
         return out
 
     def _next_key(self):
@@ -186,7 +238,10 @@ class ServingEngine:
             self._sched = Scheduler(self.cfg, self.model, self.params,
                                     n_slots=self.slots, max_len=self.max_len,
                                     prefill_chunk=self.prefill_chunk,
-                                    interleave_steps=self.interleave_steps)
+                                    interleave_steps=self.interleave_steps,
+                                    page_size=self.page_size,
+                                    pool_pages=self.pool_pages,
+                                    prefix_cache=self.prefix_cache)
         return self._sched
 
     def generate(self, requests: list[Request], key=None) -> list[np.ndarray]:

@@ -50,6 +50,25 @@ outputs (temperature > 0) are a deterministic replay of (base key,
 submission index since the last reseed, token index) — the same
 submissions after the same reseed reproduce the same draws regardless
 of slot assignment.
+
+Paged mode (`page_size=P`, attention families only): the slot cache's
+K/V leaves become a batch-axis-free page pool `(layers, pool_pages, P,
+Hkv, words)` plus per-slot int32 page tables (sentinel = pool_pages;
+chunk writes scatter through the table with .set(mode="drop"), so the
+pos=-1 burst sentinel keeps working unchanged). Pages are refcounted
+(serving.pager.PagePool) and pre-allocated at admission for the
+request's worst case. With `prefix_cache=True` a radix tree over
+retired immutable full prompt pages (serving.prefix_cache.PrefixCache)
+lets admission pin the longest cached full-page prefix zero-copy into
+the new slot's table — prefill runs only for the unseen suffix, the
+kv_bits=1 v_scale running mean is restored from a page-boundary
+snapshot, and Completion.ttft charges only that suffix compute
+(ttft_wall keeps the submit->first-token wall; cached_tokens counts the
+pinned tokens). Retirement inserts the request's full prompt pages into
+the tree; LRU unpinned leaves are evicted only when an admission needs
+pages and the pool is full. Paging is a pure addressing change: outputs
+are asserted token-identical to the contiguous slot cache, and
+recurrent (SSM/hybrid) state stays unpaged — it is O(1) per slot.
 """
 from __future__ import annotations
 
@@ -64,6 +83,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.api import Model, cache_batch_axes
+from repro.serving.pager import PagePool
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampling import request_key, sample_tokens, step_keys
 
 Array = jax.Array
@@ -86,9 +107,16 @@ class Completion:
     # requests finishing inside the same burst share a timestamp, so under
     # run()'s drain tail this is an upper bound on true latency
     latency: float
-    # seconds, submit -> first token sampled (end of the request's own
-    # admission — the number chunked prefill exists to keep flat)
+    # seconds of device compute the request's OWN admission cost, through
+    # first-token sampling (device-synced, like prefill_s). On a prefix-
+    # cache hit only the unseen suffix prefills, so the skipped prefix is
+    # never charged here — the number the prefix cache exists to shrink
     ttft: float = 0.0
+    # seconds, submit -> first token sampled, wall clock: admission compute
+    # PLUS every stall behind other slots' chunks and decode bursts
+    ttft_wall: float = 0.0
+    # prompt tokens served from the prefix cache (skipped prefill)
+    cached_tokens: int = 0
     # inter-token intervals (seconds) for decode tokens, at burst
     # granularity: a burst's n tokens split the burst duration evenly and
     # time the slot spent stalled BEFORE the burst (behind another
@@ -103,6 +131,7 @@ class _Running:
     rid: int
     prompt_len: int
     max_new: int
+    prompt: np.ndarray | None = None   # kept only for prefix-tree insertion
 
 
 @dataclasses.dataclass
@@ -114,6 +143,7 @@ class _Admission:
     req: Request
     n_chunks: int
     next: int = 0
+    start: int = 0      # prompt tokens served from the prefix cache
 
 
 class Scheduler:
@@ -135,14 +165,49 @@ class Scheduler:
     def __init__(self, cfg: ModelConfig, model: Model, params, *,
                  n_slots: int = 4, max_len: int = 512,
                  key: Array | None = None, prefill_chunk: int | None = None,
-                 interleave_steps: int = 8):
+                 interleave_steps: int = 8, page_size: int | None = None,
+                 pool_pages: int | None = None, prefix_cache: bool = False):
         assert prefill_chunk is None or prefill_chunk >= 1
         self.cfg, self.model, self.params = cfg, model, params
         self.n_slots, self.max_len = n_slots, max_len
         self.max_out = max_len
         self.prefill_chunk = prefill_chunk
         self.interleave_steps = interleave_steps
-        self._axes = cache_batch_axes(model, max_len)
+        # paged KV applies to the attention families only — mamba/rg
+        # recurrent state is O(1) per slot and stays slot-resident
+        attn_fam = cfg.family in ("dense", "moe", "audio", "vlm")
+        self._paged = page_size is not None and attn_fam
+        cache_kw = {}
+        if self._paged:
+            assert page_size >= 1
+            assert prefill_chunk is not None, \
+                "paged KV fills through chunked admission — pass prefill_chunk"
+            self.page_size = page_size
+            self.n_pages = -(-max_len // page_size)
+            self.pool_pages = (pool_pages if pool_pages is not None
+                               else n_slots * self.n_pages)
+            cache_kw = {"page_size": page_size,
+                        "pool_pages": self.pool_pages}
+            self._pager = PagePool(self.pool_pages)
+            self._slot_pages: dict[int, list[int]] = {}
+        # the prefix tree shares full pages across requests with equal
+        # token prefixes; vlm is excluded — its image embeddings condition
+        # every KV row, so equal token prefixes do NOT imply equal pages
+        # (the self-KV pools are still paged, just never shared)
+        self._use_tree = bool(prefix_cache) and self._paged and \
+            cfg.family != "vlm"
+        if prefix_cache:
+            assert self._paged or not attn_fam, \
+                "prefix_cache needs the paged cache — pass page_size"
+        if self._use_tree:
+            # running V-scale snapshots are taken at chunk ends, so page
+            # boundaries must land on chunk ends to be insertable
+            assert cfg.kv_bits != 1 or page_size % prefill_chunk == 0, \
+                f"prefix_cache with kv_bits=1 needs page_size divisible " \
+                f"by prefill_chunk ({page_size} % {prefill_chunk})"
+            self._ptree = PrefixCache(self._pager, page_size)
+        self._needs_vs = cfg.kv_bits == 1 and attn_fam
+        self._axes = cache_batch_axes(model, max_len, **cache_kw)
         self._base_key = key if key is not None else jax.random.PRNGKey(0)
         self._key_rid0 = 0      # rid the current base key was set at
         self._next_rid = 0
@@ -152,15 +217,20 @@ class Scheduler:
         self._admitting: deque[_Admission] = deque()
         self._submit_time: dict[int, float] = {}    # pending/running only
         self._ttft: dict[int, float] = {}
+        self._ttft_wall: dict[int, float] = {}
+        self._req_prefill_s: dict[int, float] = {}  # own-admission compute
+        self._cached_tokens: dict[int, int] = {}
+        self._vs_snaps: dict[int, dict[int, Any]] = {}
         self._itl: dict[int, list] = {}
         self._slot_last_tok: dict[int, float] = {}
         self._prev_out_len = np.zeros((n_slots,), np.int64)
         self._prefill_shapes: set = set()
         self.stats = {"prefill_tokens": 0, "prefill_s": 0.0, "bursts": 0,
                       "decode_s": 0.0, "tokens_out": 0, "completed": 0,
-                      "max_admit_stall_tokens": 0}
+                      "max_admit_stall_tokens": 0,
+                      "prefill_tokens_saved": 0, "prefix_hits": 0}
 
-        self._cache = model.init_cache(n_slots, max_len)
+        self._cache = model.init_cache(n_slots, max_len, **cache_kw)
         self._state = {
             "cur": jnp.zeros((n_slots,), jnp.int32),
             "pos": jnp.zeros((n_slots,), jnp.int32),
@@ -295,6 +365,11 @@ class Scheduler:
         assert req.max_new_tokens >= 1
         assert prompt.size + req.max_new_tokens <= self.max_len, \
             f"{prompt.size}+{req.max_new_tokens} exceeds max_len={self.max_len}"
+        if self._paged:
+            need = -(-(int(prompt.size) + req.max_new_tokens - 1)
+                     // self.page_size)
+            assert need <= self.pool_pages, \
+                f"request needs {need} pages > pool_pages={self.pool_pages}"
         rid = self._next_rid
         self._next_rid += 1
         self._queue.append((rid, dataclasses.replace(req, prompt=prompt)))
@@ -316,7 +391,12 @@ class Scheduler:
 
     def _note_first_token(self, slot: int, rid: int) -> None:
         now = time.time()
-        self._ttft[rid] = now - self._submit_time[rid]
+        wall = now - self._submit_time[rid]
+        self._ttft_wall[rid] = wall
+        # ttft = the request's OWN admission compute (device-synced sum of
+        # its prefill calls, first-token sampling included) — a prefix hit
+        # skips the cached prefix entirely, so it is never charged here
+        self._ttft[rid] = self._req_prefill_s.pop(rid, wall)
         self._slot_last_tok[slot] = now
         self._prev_out_len[slot] = 1
 
@@ -339,7 +419,9 @@ class Scheduler:
                 self.params, self._state, self._cache, tokens, slot,
                 rkey, req.max_new_tokens, float(req.temperature), eos)
         jax.block_until_ready(self._state["done"])   # honest prefill_s
-        self.stats["prefill_s"] += time.time() - t0
+        dt = time.time() - t0
+        self.stats["prefill_s"] += dt
+        self._req_prefill_s[rid] = dt
         self._prefill_shapes.add(("whole", int(req.prompt.size)))
         self._running[slot] = _Running(rid, int(req.prompt.size),
                                        req.max_new_tokens)
@@ -368,16 +450,114 @@ class Scheduler:
             self._chunk_jits[(final, with_img)] = fn
         return fn
 
-    def _start_admission(self, slot: int, rid: int, req: Request) -> None:
+    # -- paged-cache plumbing -----------------------------------------------
+    def _set_page_row(self, slot: int, pages: list[int]) -> None:
+        """Write one slot's page-table row: `pages` in position order, the
+        pool-size sentinel beyond (unallocated — kernels clip + mask)."""
+        row = np.full((self.n_pages,), self.pool_pages, np.int32)
+        row[:len(pages)] = pages
+        self._cache["page_table"] = \
+            self._cache["page_table"].at[slot].set(jnp.asarray(row))
+
+    def _alloc_pages(self, n: int):
+        """All-or-nothing page allocation, evicting cold prefix-tree
+        entries when the free list alone cannot cover it."""
+        got = self._pager.alloc(n)
+        if got is None and self._use_tree:
+            self._ptree.evict(n - self._pager.free_count())
+            got = self._pager.alloc(n)
+        return got
+
+    def page_stats(self) -> dict | None:
+        """Page-pool utilization split: allocated vs pinned-only-by-the-
+        prefix-tree vs free, plus tree hit counters. None when unpaged."""
+        if not self._paged:
+            return None
+        out = self._pager.stats()
+        out["page_size"] = self.page_size
+        out["pinned_by_prefix"] = self._ptree.n_pages if self._use_tree else 0
+        if self._use_tree:
+            out["prefix_tree"] = self._ptree.stats()
+        return out
+
+    def _retire_slot(self, slot: int, info: _Running) -> None:
+        """Release a completed slot's pages. With the prefix tree, its
+        prompt-region FULL pages (immutable from here on — decode only
+        ever wrote past the prompt) are offered to the tree first: new
+        token runs hand their page's reference to the tree (zero-copy
+        insertion), runs already cached keep the incumbent page and ours
+        is released. Everything else — tail page, decode pages — drops
+        its slot reference; pages still pinned by the tree or by other
+        slots survive, the rest return to the free list."""
+        pages = self._slot_pages.pop(slot)
+        taken: set = set()
+        if self._use_tree and info.prompt is not None:
+            ps = self.page_size
+            snaps = self._vs_snaps.get(info.rid, {})
+            n_full = info.prompt_len // ps
+            payloads = []
+            for i in range(n_full):
+                if self._needs_vs and snaps.get((i + 1) * ps) is None:
+                    break       # boundary missed its snapshot: stop here
+                payloads.append(snaps.get((i + 1) * ps))
+            taken = self._ptree.insert(info.prompt[:len(payloads) * ps],
+                                       pages[:len(payloads)], payloads)
+        self._vs_snaps.pop(info.rid, None)
+        self._pager.decref([p for p in pages if p not in taken])
+        self._set_page_row(slot, [])
+
+    def _start_admission(self, slot: int, rid: int, req: Request) -> bool:
+        """Reserve `slot` and queue the request's chunked admission.
+        Paged: allocate every page the request can reach up front (so
+        decode never faults mid-flight), consulting the prefix tree first
+        — matched full pages pin into the page table with zero copies and
+        only the unseen suffix is scheduled for prefill. Returns False
+        (nothing reserved) when the pool cannot satisfy the request even
+        after evicting cold tree entries — the caller requeues."""
         c = self.prefill_chunk
-        n_chunks = max(1, -(-int(req.prompt.size) // c))
-        self._admitting.append(_Admission(slot, rid, req, n_chunks))
+        start = 0
+        if self._paged:
+            plen = int(req.prompt.size)
+            ps = self.page_size
+            pinned: list[int] = []
+            payloads: list[Any] = []
+            if self._use_tree:
+                # cap the match below the full prompt: the final prompt
+                # token must prefill HERE to produce first-token logits
+                cap = ((plen - 1) // ps) * ps
+                pinned, payloads = self._ptree.lookup(req.prompt[:cap])
+                start = len(pinned) * ps
+            need = -(-(plen + req.max_new_tokens - 1) // ps)
+            fresh = self._alloc_pages(need - len(pinned))
+            if fresh is None:
+                if pinned:
+                    self._pager.decref(pinned)
+                return False
+            pages = pinned + fresh
+            self._slot_pages[slot] = pages
+            self._set_page_row(slot, pages)
+            if start:
+                self.stats["prefix_hits"] += 1
+                self.stats["prefill_tokens_saved"] += start
+                self._cached_tokens[rid] = start
+            # seed the boundary->v_scale snapshot map from the matched
+            # payloads and restore the running mean at `start`, so suffix
+            # prefill continues it exactly where the cached pages left off
+            self._vs_snaps[rid] = {(i + 1) * ps: payloads[i]
+                                   for i in range(len(payloads))}
+            if start and self._needs_vs:
+                self._cache["v_scale"] = self._cache["v_scale"].at[:, slot] \
+                    .set(jnp.asarray(payloads[-1]))
+        n_chunks = max(1, -(-(int(req.prompt.size) - start) // c))
+        self._admitting.append(_Admission(slot, rid, req, n_chunks,
+                                          start=start))
+        return True
 
     def _advance_admission(self) -> None:
         """Advance the head admission by exactly one chunk."""
         adm = self._admitting[0]
         req, slot, c = adm.req, adm.slot, self.prefill_chunk
-        lo = adm.next * c
+        lo = adm.start + adm.next * c
         n_valid = min(c, int(req.prompt.size) - lo)
         final = adm.next == adm.n_chunks - 1
         with_img = self.cfg.family == "vlm" and adm.next == 0
@@ -404,14 +584,27 @@ class Scheduler:
                 self.params, self._cache, tokens, slot, lo, n_valid,
                 *img_args)
         jax.block_until_ready(self._cache)           # honest prefill_s
-        self.stats["prefill_s"] += time.time() - t0
+        dt = time.time() - t0
+        self.stats["prefill_s"] += dt
+        self._req_prefill_s[adm.rid] = \
+            self._req_prefill_s.get(adm.rid, 0.0) + dt
         self.stats["prefill_tokens"] += n_valid
         self._prefill_shapes.add(("chunk", c, final, with_img))
         adm.next += 1
+        end = lo + n_valid
+        if self._use_tree and end % self.page_size == 0 and \
+                end not in self._vs_snaps.get(adm.rid, {}):
+            # chunk end landed on a page boundary: snapshot the running
+            # V scale so the page is insertable at retirement (a later hit
+            # restores it and continues the running mean bit-exactly)
+            self._vs_snaps[adm.rid][end] = (
+                np.asarray(jax.device_get(self._cache["v_scale"][:, slot]))
+                if self._needs_vs else None)
         if final:
             self._admitting.popleft()
-            self._running[slot] = _Running(adm.rid, int(req.prompt.size),
-                                           req.max_new_tokens)
+            self._running[slot] = _Running(
+                adm.rid, int(req.prompt.size), req.max_new_tokens,
+                prompt=req.prompt if self._use_tree else None)
             self._note_first_token(slot, adm.rid)
 
     def _note_burst_tokens(self, t_start: float) -> None:
@@ -451,11 +644,15 @@ class Scheduler:
             toks = outs[slot, :int(out_len[slot])].astype(np.int32)
             self.stats["tokens_out"] += int(toks.size)
             self.stats["completed"] += 1
+            if self._paged:
+                self._retire_slot(slot, info)
             self._free.append(slot)
             self._slot_last_tok.pop(slot, None)
             completed.append(Completion(
                 info.rid, toks, now - self._submit_time.pop(info.rid),
                 ttft=self._ttft.pop(info.rid, 0.0),
+                ttft_wall=self._ttft_wall.pop(info.rid, 0.0),
+                cached_tokens=self._cached_tokens.pop(info.rid, 0),
                 itl=np.asarray(self._itl.pop(info.rid, []))))
         idx = jnp.asarray(slots, jnp.int32)
         self._state = dict(self._state,
@@ -476,7 +673,16 @@ class Scheduler:
             rid, req = self._queue.popleft()
             slot = self._free.pop(0)
             if self.prefill_chunk:
-                self._start_admission(slot, rid, req)
+                if not self._start_admission(slot, rid, req):
+                    # page pool exhausted even after eviction: requeue and
+                    # wait for in-flight requests to retire their pages
+                    self._queue.appendleft((rid, req))
+                    self._free.insert(0, slot)
+                    if not self._running and not self._admitting:
+                        raise RuntimeError(
+                            "page pool exhausted with nothing in flight — "
+                            "pool_pages too small for a single request")
+                    break
             else:
                 self._admit(slot, rid, req)
         if self._admitting:
