@@ -41,8 +41,14 @@ PAIRS = [
 # gates above, these don't need two entries or tolerate drift):
 #   prefill_saved_frac — fraction of prompt tokens the prefix cache served
 #   zero-copy under Zipf-shared-header traffic (bench_prefix_cache).
+#   sharded_tok_s_scaling_4x — modeled aggregate tok/s gain 1 -> 4 mesh
+#   devices: per-device decode-step time must thin with the slot shard.
+#   sharded_bytes_per_device_shrink_4x — cache+state bytes/device ratio
+#   1 -> 4 devices, from real shard sizes (bench_sharded_serving).
 FLOORS = [
     ("prefill_saved_frac", 0.5),
+    ("sharded_tok_s_scaling_4x", 1.5),
+    ("sharded_bytes_per_device_shrink_4x", 3.0),
 ]
 
 

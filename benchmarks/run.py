@@ -26,6 +26,11 @@ _record.py).
                              over the paged packed pool vs contiguous
                              chunked: prefill tokens saved, TTFT, pool
                              bytes packed vs float)
+  mesh-sharded serving    -> bench_sharded_serving (slot batch sharded over
+                             a device mesh: modeled tok/s scaling,
+                             bytes/device from real shards, replica fit —
+                             runs its measurement in a subprocess with
+                             forced host devices)
   roofline (dry-run)      -> src/repro/roofline/report.py (separate: needs
                              the 512-device dryrun_results.jsonl)
 """
@@ -45,18 +50,20 @@ def main() -> None:
         bench_continuous_serving, bench_convergence, bench_decode_attention,
         bench_energy, bench_kernel_dedup, bench_packed_serving,
         bench_prefill_interleave, bench_prefix_cache, bench_saturation,
+        bench_sharded_serving,
     )
     from benchmarks._record import record
     mods = [bench_energy, bench_binary_gemm, bench_packed_serving,
             bench_continuous_serving, bench_prefill_interleave,
-            bench_prefix_cache, bench_bit_resident, bench_decode_attention,
-            bench_kernel_dedup, bench_accuracy, bench_saturation,
-            bench_convergence]
+            bench_prefix_cache, bench_sharded_serving, bench_bit_resident,
+            bench_decode_attention, bench_kernel_dedup, bench_accuracy,
+            bench_saturation, bench_convergence]
     # these record their own trajectory entries (rows + structured extras),
     # standalone or under run.py — don't double-append
     self_recording = {bench_bit_resident, bench_decode_attention,
                       bench_packed_serving, bench_continuous_serving,
-                      bench_prefill_interleave, bench_prefix_cache}
+                      bench_prefill_interleave, bench_prefix_cache,
+                      bench_sharded_serving}
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")
     for mod in mods:

@@ -90,3 +90,32 @@ def attn_geometry(b: int, s: int, block_b: int, block_q: int) -> AttnGeometry:
     bq = max(1, min(block_q, s))
     pb, ps = (-b) % bb, (-s) % bq
     return AttnGeometry(bb, bq, pb, ps, (b + pb) // bb, (s + ps) // bq)
+
+
+class ShardGeometry(NamedTuple):
+    """One tensor-parallel axis split: `dim` rows over `parts` devices."""
+    dim: int
+    parts: int
+    local: int       # rows per device
+
+
+@functools.lru_cache(maxsize=None)
+def shard_geometry(dim: int, parts: int, *, name: str = "dim",
+                   multiple: int = 1) -> ShardGeometry:
+    """Validated geometry for sharding one kernel axis over a mesh axis.
+
+    The packed kernels' grids are derived from *local* shard shapes under
+    shard_map, so the split must be exact: `dim % parts == 0` (no ragged
+    shards) and each local extent a multiple of `multiple` — the fused
+    GEMM's output words repack 32 N-columns per uint32, so its N shard
+    must stay word-aligned or the per-device word axes would not
+    concatenate into the unsharded layout.
+    """
+    assert parts >= 1, parts
+    assert dim % parts == 0, \
+        f"{name}={dim} does not divide over {parts} mesh devices"
+    local = dim // parts
+    assert local % multiple == 0, \
+        f"{name} shard of {local} rows breaks the required multiple " \
+        f"of {multiple} (dim={dim}, parts={parts})"
+    return ShardGeometry(dim, parts, local)

@@ -47,6 +47,7 @@ CLI:
 from __future__ import annotations
 
 import argparse
+import contextlib
 import functools
 import json
 import os
@@ -194,12 +195,53 @@ def _heuristic(kernel: str, shape: dict[str, int]) -> tuple[str, dict]:
 # get_route misses, for tooling: maps (kernel, key) -> shape dict.
 misses: dict[tuple[str, str], dict[str, int]] = {}
 
+# Active route pins (kernel name -> route), installed by `route_override`.
+# Highest dispatch priority: consulted before the tuned cache.
+_ROUTE_OVERRIDE: dict[str, str] = {}
+
+# Every packed kernel's GSPMD-partitionable realization: pallas_call is
+# opaque to XLA's auto-sharding, so jit'd code tracing over *sharded
+# global* operands (the mesh scheduler's admission path) must resolve to
+# a plain-XLA formulation. 'xla' is the ref oracle — bit-exact with every
+# other route by construction — so pinning it can never change tokens.
+GSPMD_SAFE_ROUTES = {
+    "binary_gemm": "xla", "binary_gemm_fused": "xla",
+    "decode_attention": "xla", "decode_attention_paged": "xla",
+    "prefill_attention": "xla", "prefill_attention_paged": "xla",
+}
+
+
+@contextlib.contextmanager
+def route_override(**kernel_routes: str):
+    """Pin `kernel -> route` for every get_route call inside the context.
+
+    Overrides apply at *trace* time: keep the context open around the jit
+    call whose traced code should resolve to the pinned routes (retraces
+    outside the context fall back to the tuned cache). Nests; inner
+    contexts win on conflicts and restore the outer pins on exit.
+    """
+    old = dict(_ROUTE_OVERRIDE)
+    _ROUTE_OVERRIDE.update(kernel_routes)
+    try:
+        yield
+    finally:
+        _ROUTE_OVERRIDE.clear()
+        _ROUTE_OVERRIDE.update(old)
+
+
+def gspmd_safe():
+    """route_override pinning every packed kernel to its GSPMD-safe route."""
+    return route_override(**GSPMD_SAFE_ROUTES)
+
 
 def get_route(kernel: str, **shape: int) -> tuple[str, dict]:
     """Resolve (route, kernel params) for a static shape. Pure Python on
-    static ints — safe to call at trace time. Cache hit wins; otherwise
-    the backend heuristic (or, with REPRO_AUTOTUNE=1 outside a trace,
-    tune the missing bucket now and persist it)."""
+    static ints — safe to call at trace time. An active `route_override`
+    pin wins; then a cache hit; otherwise the backend heuristic (or, with
+    REPRO_AUTOTUNE=1 outside a trace, tune the missing bucket now and
+    persist it)."""
+    if kernel in _ROUTE_OVERRIDE:
+        return _ROUTE_OVERRIDE[kernel], {}
     key = bucket_key(shape)
     entry = load_cache().get(kernel, {}).get(key)
     if entry is not None:

@@ -1,13 +1,10 @@
-import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
-                           " --xla_force_host_platform_device_count=512").strip()
-
 """Multi-pod dry-run: prove every (arch x shape x mesh) cell lowers,
 GSPMD-partitions, and compiles on the production mesh, and extract the
 memory / FLOP / collective numbers the roofline analysis consumes.
 
-MUST be run as its own process (the XLA flag above is latched at first
-jax init — that is why it precedes every other import, including repro's).
+MUST be run as its own process (the XLA flag set immediately below is
+latched at first jax init — that is why it precedes every other import,
+including repro's).
 
 Usage:
   python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
@@ -15,6 +12,10 @@ Usage:
   python -m repro.launch.dryrun --all --multi-pod
 Results are appended as JSON lines to --out (default dryrun_results.jsonl).
 """
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
 import argparse
 import json
 import time

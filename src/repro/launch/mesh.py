@@ -14,6 +14,7 @@ all-reduce crosses the DCN/ICI pod boundary); 'data' is FSDP/ZeRO-3;
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -27,6 +28,39 @@ def make_host_mesh(model: int = 1):
     n = len(jax.devices())
     assert n % model == 0, (n, model)
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def parse_mesh(spec: str) -> tuple[int, int]:
+    """Parse a `--mesh` flag value into (data, model) axis sizes.
+
+    Accepts bare sizes ('2,1', '4') or named ('data=2,model=1' in either
+    order); a single number is the data axis with model=1.
+    """
+    parts = [p.strip() for p in spec.split(",") if p.strip()]
+    assert parts, f"empty mesh spec: {spec!r}"
+    if any("=" in p for p in parts):
+        kv = dict(p.split("=", 1) for p in parts)
+        unknown = set(kv) - {"data", "model"}
+        assert not unknown, f"unknown mesh axes {sorted(unknown)} in {spec!r}"
+        return int(kv.get("data", 1)), int(kv.get("model", 1))
+    assert len(parts) <= 2, f"mesh spec has >2 axes: {spec!r}"
+    data = int(parts[0])
+    model = int(parts[1]) if len(parts) == 2 else 1
+    return data, model
+
+
+def make_serving_mesh(data: int = 1, model: int = 1):
+    """('data', 'model') mesh over the first data*model devices — unlike
+    `make_host_mesh` it does not have to cover every device, so a serving
+    job can pin a sub-mesh (and leave the rest to replicas)."""
+    assert data >= 1 and model >= 1, (data, model)
+    devs = jax.devices()
+    need = data * model
+    assert need <= len(devs), \
+        f"mesh {data}x{model} needs {need} devices, have {len(devs)} " \
+        f"(simulate with XLA_FLAGS=--xla_force_host_platform_device_count=N)"
+    return jax.sharding.Mesh(
+        np.asarray(devs[:need]).reshape(data, model), ("data", "model"))
 
 
 def batch_axes(mesh) -> tuple[str, ...]:

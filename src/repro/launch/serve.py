@@ -58,6 +58,18 @@ def main() -> None:
                          "(0 = submit everything upfront)")
     ap.add_argument("--slots", type=int, default=4,
                     help="decode slots in --queue mode")
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+                    help="serve over a device mesh: 'data=D,model=M' (or "
+                         "'D,M'/'D'). The scheduler shards its slots over "
+                         "the data axis (shard_map decode burst); a model "
+                         "axis replicates serving state and is reserved "
+                         "for the tensor-parallel kernel wrappers. "
+                         "Simulate devices on CPU with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="data-parallel replica serving: one request queue "
+                         "fans out to this many single-device engines "
+                         "(serving.replica; exclusive with --mesh/--queue)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -77,10 +89,22 @@ def main() -> None:
     else:
         params = model.init(key)
 
+    if args.replicas:
+        _serve_replicas(cfg, params, rng_seed=args.seed, args=args)
+        return
+
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_serving_mesh, parse_mesh
+        data, model_ax = parse_mesh(args.mesh)
+        mesh = make_serving_mesh(data, model_ax)
+        print(f"serving mesh: data={data} x model={model_ax} over "
+              f"{data * model_ax} of {len(jax.devices())} devices")
+
     eng = ServingEngine(cfg, params,
                         max_len=args.prompt_len + args.max_new + 1,
                         freeze=args.freeze, slots=args.slots, seed=args.seed,
-                        kv_bits=args.kv_bits,
+                        kv_bits=args.kv_bits, mesh=mesh,
                         prefill_chunk=args.prefill_chunk or None,
                         page_size=args.page_size or None,
                         pool_pages=args.pool_pages or None,
@@ -106,6 +130,15 @@ def main() -> None:
             print(f"page pool: {pp['pages']} pages x {pp['page_size']} "
                   f"tokens = {pp['allocated']} allocated "
                   f"({pinned} pinned by prefix tree) + {pp['free']} free")
+        if mesh is not None:
+            # live per-device residency: shards of the placed arrays, so
+            # batch-sharded cache/state leaves count 1/data-th per device
+            # while packed weights and paged pools replicate
+            for dev, b in sorted(eng.resident_bytes_per_device().items()):
+                print(f"  {dev}: {b['total']/1e6:.3f} MB resident = "
+                      f"{b['weights']/1e6:.3f} MB weights + "
+                      f"{b['cache']/1e6:.3f} MB cache/pool + "
+                      f"{b['state']/1e6:.3f} MB serving state")
         for name, (route, params) in eng.kernel_routes().items():
             extra = f" {params}" if params else ""
             print(f"kernel route {name}: {route}{extra}")
@@ -123,6 +156,57 @@ def main() -> None:
     for i, o in enumerate(outs):
         print(f"req {i}: {o.tolist()}")
     print("stats:", eng.scheduler().stats)
+
+
+def _serve_replicas(cfg, params, *, rng_seed: int, args) -> None:
+    """Replica fan-out mode: one queue of `--batch` requests round-robins
+    over `--replicas` single-device engines (serving.replica)."""
+    from repro.serving.engine import Request
+    from repro.serving.replica import ReplicaServer, devices_needed
+
+    devs = jax.devices()
+    assert args.replicas <= len(devs), \
+        f"--replicas {args.replicas} > {len(devs)} devices " \
+        f"(simulate with XLA_FLAGS=--xla_force_host_platform_device_count=N)"
+    srv = ReplicaServer(cfg, params, devices=devs[:args.replicas],
+                        max_len=args.prompt_len + args.max_new + 1,
+                        freeze=args.freeze, slots=args.slots, seed=args.seed,
+                        kv_bits=args.kv_bits,
+                        prefill_chunk=args.prefill_chunk or None,
+                        page_size=args.page_size or None,
+                        pool_pages=args.pool_pages or None,
+                        prefix_cache=args.prefix_cache)
+    rng = np.random.default_rng(rng_seed)
+    lo = max(1, args.prompt_len // 4)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab,
+                                        int(rng.integers(lo, args.prompt_len + 1)),
+                                        dtype=np.int32),
+                    max_new_tokens=args.max_new)
+            for _ in range(args.batch)]
+    t0 = time.time()
+    outs = srv.generate(reqs)
+    wall = time.time() - t0
+    st = srv.stats()
+    print(f"{st['replicas']} replicas served {len(outs)} requests in "
+          f"{wall:.3f}s | {st['tokens_out']/wall:.1f} tok/s aggregate")
+    for e in st["per_replica"]:
+        line = (f"  {e['device']}: {e['weight_bytes']/1e6:.2f} MB weights + "
+                f"{e['cache_bytes']/1e6:.3f} MB cache")
+        s = e.get("scheduler")
+        if s:
+            line += (f" | {s['completed']} reqs, {s['tokens_out']} tokens, "
+                     f"decode {s['decode_s']:.3f}s")
+        print(line)
+    if args.freeze:
+        # the fit argument, in device units: a per-device budget sized so
+        # the fp32 masters would need 8 devices vs what packed needs
+        wb = st["per_replica"][0]["weight_bytes"]
+        unpacked = sum(int(np.prod(l.shape)) * 4 for l in
+                       jax.tree.leaves(jax.eval_shape(lambda: params)))
+        budget = -(-unpacked // 8)
+        print(f"fit at a {budget/1e6:.2f} MB/device budget (float needs "
+              f"{devices_needed(unpacked, budget)}): packed replica fits in "
+              f"{devices_needed(wb, budget)} device(s)")
 
 
 def _serve_queue(eng, cfg, rng, args) -> None:

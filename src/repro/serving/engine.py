@@ -174,6 +174,34 @@ class ServingEngine:
                 out["page_pool"] = ps
         return out
 
+    def resident_bytes_per_device(self) -> dict:
+        """Live per-device residency under a mesh: for every device, the
+        bytes of weights / KV cache (or recurrent state) / serving state
+        it actually holds, summed over the *local shards* of the
+        scheduler's placed arrays — replicated leaves (packed weights,
+        paged pools) count their full size on every device, batch-sharded
+        leaves only their slot shard. Requires `mesh`; builds the
+        scheduler if needed (that is where placement happens)."""
+        assert self.mesh is not None, "resident_bytes_per_device needs a mesh"
+        sched = self.scheduler()
+        out: dict = {}
+
+        def add(tree, kind: str) -> None:
+            for leaf in jax.tree.leaves(tree):
+                if not isinstance(leaf, jax.Array):
+                    continue
+                for sh in leaf.addressable_shards:
+                    d = out.setdefault(
+                        str(sh.device), {"weights": 0, "cache": 0, "state": 0})
+                    d[kind] += int(sh.data.nbytes)
+
+        add(self.params, "weights")
+        add(sched._cache, "cache")
+        add(sched._state, "state")
+        for d in out.values():
+            d["total"] = d["weights"] + d["cache"] + d["state"]
+        return out
+
     def kernel_routes(self) -> dict:
         """Resolved kernel routes (repro.kernels.tune) for this engine's
         characteristic shapes: which realization each packed kernel will
@@ -241,7 +269,12 @@ class ServingEngine:
                                     interleave_steps=self.interleave_steps,
                                     page_size=self.page_size,
                                     pool_pages=self.pool_pages,
-                                    prefix_cache=self.prefix_cache)
+                                    prefix_cache=self.prefix_cache,
+                                    mesh=self.mesh)
+            if self.mesh is not None:
+                # the scheduler replicated the params over the mesh —
+                # serve the engine's other paths from the same placement
+                self.params = self._sched.params
         return self._sched
 
     def generate(self, requests: list[Request], key=None) -> list[np.ndarray]:

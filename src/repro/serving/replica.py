@@ -1,0 +1,133 @@
+"""Data-parallel replica serving: one request queue, R per-device engines.
+
+The mesh scheduler (serving.scheduler with `mesh=`) shards one slot batch
+over devices; this module is the other axis of scale-out: full model
+replicas, each a single-device `ServingEngine` with its own scheduler,
+fed round-robin from one submission queue. Replicas share nothing at
+runtime — no collectives, no cross-device sync — so R replicas multiply
+request throughput by R as long as each fits its device.
+
+That fit is the paper's deployment argument in device units: packed 1-bit
+weights are ~32x smaller than their fp32 masters, so the weight budget
+that forces a float deployment to *partition* across 8 devices fits a
+*whole replica* on 1 (`devices_needed` measures it from real resident
+bytes; benchmarks/bench_sharded_serving.py records it). Replicas are the
+better trade whenever the model fits: tensor parallelism buys latency at
+the cost of per-layer collectives, replicas buy throughput for free.
+
+Each replica's params/cache/state are committed to its own device
+(construction runs under `jax.default_device`), and `generate` drives
+every replica's scheduler from its own Python thread — the GIL is
+released inside `block_until_ready`, so host-side scheduling of replica
+i overlaps device compute of replica j even on one process.
+
+Greedy outputs are bit-identical to a single-device engine serving the
+same requests (per-row compute is batch-composition-independent — the
+scheduler's invariant), so replica fan-out is invisible in tokens.
+Sampled requests draw from per-replica key streams: deterministic given
+the replica assignment (round-robin by submission order), but not the
+same draws a single engine would make.
+"""
+from __future__ import annotations
+
+import threading
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.serving.engine import Request, ServingEngine
+
+__all__ = ["ReplicaServer", "devices_needed"]
+
+
+def devices_needed(resident_bytes: int, device_budget_bytes: int) -> int:
+    """Devices a tenant of `resident_bytes` needs under a per-device
+    memory budget — the unit the 32x packed shrink is spent in."""
+    assert device_budget_bytes > 0
+    return max(1, -(-int(resident_bytes) // int(device_budget_bytes)))
+
+
+class ReplicaServer:
+    """R single-device serving engines behind one queue.
+
+    `devices`: one jax device per replica (default: every visible
+    device). Engine kwargs (`freeze`, `kv_bits`, `slots`, `prefill_chunk`,
+    `page_size`, ...) apply to every replica. Each replica holds its own
+    copy of `params` (device_put at construction; freezing packs per
+    replica), its own KV cache/pool, and its own prefix tree — prefix
+    sharing stays per-replica, which is why round-robin (not
+    least-loaded) assignment is the default: equal interleaving keeps
+    repeated prefixes landing on every replica.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, devices=None,
+                 **engine_kw):
+        self.devices = (list(devices) if devices is not None
+                        else list(jax.devices()))
+        assert self.devices, "no devices for replicas"
+        assert "mesh" not in engine_kw, \
+            "replicas are single-device engines — use ServingEngine(mesh=) " \
+            "for sharded serving (or mesh-shard each replica externally)"
+        self.engines: list[ServingEngine] = []
+        for dev in self.devices:
+            with jax.default_device(dev):
+                self.engines.append(
+                    ServingEngine(cfg, jax.device_put(params, dev),
+                                  **engine_kw))
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self.engines)
+
+    def _shards(self, requests: list[Request]) -> list[list[Request]]:
+        return [requests[i::self.n_replicas] for i in range(self.n_replicas)]
+
+    def generate(self, requests: list[Request], key=None
+                 ) -> list[np.ndarray]:
+        """Serve `requests` across every replica (round-robin by index),
+        one scheduler thread per replica; returns token arrays in request
+        order."""
+        assert requests, "empty batch"
+        shards = self._shards(requests)
+        outs: list = [None] * self.n_replicas
+        errs: list = [None] * self.n_replicas
+
+        def work(i: int) -> None:
+            try:
+                if shards[i]:
+                    with jax.default_device(self.devices[i]):
+                        outs[i] = self.engines[i].generate(shards[i], key=key)
+            except BaseException as e:   # re-raised on the caller's thread
+                errs[i] = e
+
+        threads = [threading.Thread(target=work, args=(i,), daemon=True)
+                   for i in range(self.n_replicas)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for e in errs:
+            if e is not None:
+                raise e
+        merged: list = [None] * len(requests)
+        for i, shard in enumerate(shards):
+            for j in range(len(shard)):
+                merged[i + j * self.n_replicas] = outs[i][j]
+        return merged
+
+    def stats(self) -> dict:
+        """Aggregate + per-replica serving stats and resident bytes."""
+        per = []
+        for dev, eng in zip(self.devices, self.engines):
+            wb = eng.resident_weight_bytes()
+            entry = {"device": str(dev),
+                     "weight_bytes": wb["binary"] + wb["other"],
+                     "cache_bytes": eng.resident_cache_bytes()["total"]}
+            if eng._sched is not None:
+                entry["scheduler"] = dict(eng._sched.stats)
+            per.append(entry)
+        tokens = sum(e.get("scheduler", {}).get("tokens_out", 0)
+                     for e in per)
+        return {"replicas": self.n_replicas, "tokens_out": tokens,
+                "per_replica": per}

@@ -72,6 +72,7 @@ recurrent (SSM/hybrid) state stays unpaged — it is O(1) per slot.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from collections import deque
@@ -80,9 +81,12 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.models.api import Model, cache_batch_axes
+from repro.kernels import tune
+from repro.models.api import Model, PAGED, cache_batch_axes
 from repro.serving.pager import PagePool
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampling import request_key, sample_tokens, step_keys
@@ -166,7 +170,8 @@ class Scheduler:
                  n_slots: int = 4, max_len: int = 512,
                  key: Array | None = None, prefill_chunk: int | None = None,
                  interleave_steps: int = 8, page_size: int | None = None,
-                 pool_pages: int | None = None, prefix_cache: bool = False):
+                 pool_pages: int | None = None, prefix_cache: bool = False,
+                 mesh=None):
         assert prefill_chunk is None or prefill_chunk >= 1
         self.cfg, self.model, self.params = cfg, model, params
         self.n_slots, self.max_len = n_slots, max_len
@@ -242,21 +247,113 @@ class Scheduler:
             "rkey": jnp.zeros((n_slots, 2), jnp.uint32),
             "outs": jnp.zeros((n_slots, self.max_out), jnp.int32),
             "done": jnp.zeros((n_slots,), bool),
-            "steps": jnp.int32(0),
+            # per-slot so the state tree shards uniformly on axis 0; all
+            # rows of one device tick together, decode_steps() takes max
+            "steps": jnp.zeros((n_slots,), jnp.int32),
         }
         self._pkw = ({"max_len": max_len}
                      if cfg.family in ("dense", "moe", "audio", "vlm") else {})
+        self._mesh = mesh
+        self._dp = 1
+        self._state_sh = self._cache_sh = None
+        if mesh is not None:
+            self._init_mesh(mesh)
+        out_sh = (None if mesh is None
+                  else (self._state_sh, self._cache_sh))
         self._admit_jit = jax.jit(
             lambda p, st, c, t, slot, rkey, b, tp, e: self._admit_impl(
                 p, st, c, t, slot, rkey, b, tp, e, None),
-            donate_argnums=(1, 2))
+            donate_argnums=(1, 2), out_shardings=out_sh)
         self._admit_img_jit = jax.jit(
             lambda p, st, c, t, img, slot, rkey, b, tp, e: self._admit_impl(
                 p, st, c, t, slot, rkey, b, tp, e, img),
-            donate_argnums=(1, 2))
+            donate_argnums=(1, 2), out_shardings=out_sh)
         self._burst = jax.jit(self._burst_impl, donate_argnums=(1, 2),
                               static_argnums=(3, 4))
+        self._burst_jits: dict[tuple[bool, int], Any] = {}
         self._chunk_jits: dict[tuple[bool, bool], Any] = {}
+
+    # -- mesh placement -----------------------------------------------------
+    def _init_mesh(self, mesh) -> None:
+        """Data-parallel slot sharding: every state leaf and every cache
+        leaf with a batch axis splits its slots over the mesh's 'data'
+        axis; paged pool leaves (no batch axis — addressed through the
+        batch-sharded page table) and the params replicate. Decode bursts
+        run as a shard_map'ed per-device loop (`_sharded_burst`);
+        admission jits stay global-GSPMD with the packed kernels pinned
+        to their partitionable 'xla' route (`tune.gspmd_safe`). Any
+        'model' axis in the mesh is left unreferenced by the serving
+        state — leaves replicate across it, and tensor parallelism enters
+        through the kernels.sharded wrappers instead."""
+        assert "data" in mesh.axis_names, \
+            f"serving mesh needs a 'data' axis, got {mesh.axis_names}"
+        self._dp = int(mesh.shape["data"])
+        assert self.n_slots % self._dp == 0, \
+            f"n_slots={self.n_slots} must divide the data axis ({self._dp})"
+
+        def cspec(leaf, ax):
+            spec = [None] * leaf.ndim
+            if ax != PAGED:                      # PAGED pools replicate
+                spec[ax] = "data"
+            return P(*spec)
+
+        self._state_specs = jax.tree.map(
+            lambda x: P(*(("data",) + (None,) * (x.ndim - 1))), self._state)
+        self._cache_specs = jax.tree.map(cspec, self._cache, self._axes)
+        self._state_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                      self._state_specs)
+        self._cache_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                      self._cache_specs)
+        self._state = jax.device_put(self._state, self._state_sh)
+        self._cache = jax.device_put(self._cache, self._cache_sh)
+        self.params = jax.device_put(
+            self.params, NamedSharding(mesh, P()))
+
+    def _admit_ctx(self):
+        """Trace-time kernel-route pin for the GSPMD admission path (a
+        no-op without a mesh)."""
+        return (tune.gspmd_safe() if self._mesh is not None
+                else contextlib.nullcontext())
+
+    def _sharded_burst(self, drain: bool, max_steps: int):
+        """shard_map'ed decode burst: each device loops over its own slot
+        shard — per-row positions, sampling state and page-table gathers
+        all read local rows, so the loop body is exactly the single-device
+        one on a n_slots/D batch. Loop trip counts may diverge across
+        devices (each stops at its own completion event); that moves burst
+        *boundaries*, never tokens, because rows are independent. Paged
+        pool leaves are replicated inputs that each device writes at
+        disjoint rows (its own slots' pages); their replicas are re-merged
+        after the loop by an exact masked psum — changed entries are
+        summed across devices (exactly one device contributes each one)
+        and unchanged entries keep the old value bit-for-bit."""
+        fn = self._burst_jits.get((drain, max_steps))
+        if fn is None:
+            def body(params, state, cache):
+                cin = cache
+                state, cache = self._burst_impl(params, state, cache,
+                                                drain, max_steps)
+                if self._dp > 1:
+                    def merge(old, new, ax):
+                        if ax != PAGED:
+                            return new           # batch-sharded leaf
+                        chg = new != old
+                        tot = jax.lax.psum(
+                            jnp.where(chg, new, jnp.zeros((), new.dtype)),
+                            "data")
+                        anyc = jax.lax.psum(chg.astype(jnp.int32), "data") > 0
+                        return jnp.where(anyc, tot, old)
+                    cache = jax.tree.map(merge, cin, cache, self._axes)
+                return state, cache
+
+            pspecs = jax.tree.map(lambda _: P(), self.params)
+            fn = jax.jit(shard_map(
+                body, mesh=self._mesh,
+                in_specs=(pspecs, self._state_specs, self._cache_specs),
+                out_specs=(self._state_specs, self._cache_specs),
+                check_rep=False), donate_argnums=(1, 2))
+            self._burst_jits[(drain, max_steps)] = fn
+        return fn
 
     # -- device-side pieces -------------------------------------------------
     def _admit_impl(self, params, state, cache, tokens, slot, rkey,
@@ -319,7 +416,9 @@ class Scheduler:
         chunk can advance. Inactive rows decode with a pos = -1 sentinel:
         they compute garbage but write neither cache rows nor recurrent
         state, so partially admitted slots stay intact."""
-        rows = jnp.arange(self.n_slots)
+        # row count from the traced state, NOT self.n_slots: under the
+        # mesh's shard_map burst this body sees one device's slot shard
+        rows = jnp.arange(state["cur"].shape[0])
         start = state["steps"]
 
         def cond(carry):
@@ -328,7 +427,7 @@ class Scheduler:
             if not drain:
                 go &= ~jnp.any(st["done"])
             if max_steps:
-                go &= (st["steps"] - start) < max_steps
+                go &= jnp.max(st["steps"] - start) < max_steps
             return go
 
         def body(carry):
@@ -411,13 +510,15 @@ class Scheduler:
         if self.cfg.family == "vlm":
             assert req.img_emb is not None, "vlm request needs img_emb"
             img = jax.device_put(np.asarray(req.img_emb)[None])
-            self._state, self._cache = self._admit_img_jit(
-                self.params, self._state, self._cache, tokens, img, slot,
-                rkey, req.max_new_tokens, float(req.temperature), eos)
+            with self._admit_ctx():
+                self._state, self._cache = self._admit_img_jit(
+                    self.params, self._state, self._cache, tokens, img, slot,
+                    rkey, req.max_new_tokens, float(req.temperature), eos)
         else:
-            self._state, self._cache = self._admit_jit(
-                self.params, self._state, self._cache, tokens, slot,
-                rkey, req.max_new_tokens, float(req.temperature), eos)
+            with self._admit_ctx():
+                self._state, self._cache = self._admit_jit(
+                    self.params, self._state, self._cache, tokens, slot,
+                    rkey, req.max_new_tokens, float(req.temperature), eos)
         jax.block_until_ready(self._state["done"])   # honest prefill_s
         dt = time.time() - t0
         self.stats["prefill_s"] += dt
@@ -440,13 +541,17 @@ class Scheduler:
                     return self._chunk_final_impl(
                         p, st, c, t, slot, pos, nv, rkey, b, tp, e,
                         img[0] if img else None)
-                fn = jax.jit(impl, donate_argnums=(1, 2))
+                fn = jax.jit(impl, donate_argnums=(1, 2),
+                             out_shardings=(None if self._mesh is None else
+                                            (self._state_sh, self._cache_sh)))
             else:
                 def impl(p, c, t, slot, pos, nv, *img):
                     kw = {"img_emb": img[0]} if img else {}
                     return self.model.prefill_chunk(p, t, c, slot, pos, nv,
                                                     **kw)[1]
-                fn = jax.jit(impl, donate_argnums=(1,))
+                fn = jax.jit(impl, donate_argnums=(1,),
+                             out_shardings=(None if self._mesh is None else
+                                            self._cache_sh))
             self._chunk_jits[(final, with_img)] = fn
         return fn
 
@@ -575,14 +680,16 @@ class Scheduler:
         if final:
             rkey = request_key(self._base_key, adm.rid - self._key_rid0)
             eos = -1 if req.eos_id is None else int(req.eos_id)
-            self._state, self._cache = self._chunk_call(True, with_img)(
-                self.params, self._state, self._cache, tokens, slot, lo,
-                n_valid, rkey, req.max_new_tokens, float(req.temperature),
-                eos, *img_args)
+            with self._admit_ctx():
+                self._state, self._cache = self._chunk_call(True, with_img)(
+                    self.params, self._state, self._cache, tokens, slot, lo,
+                    n_valid, rkey, req.max_new_tokens, float(req.temperature),
+                    eos, *img_args)
         else:
-            self._cache = self._chunk_call(False, with_img)(
-                self.params, self._cache, tokens, slot, lo, n_valid,
-                *img_args)
+            with self._admit_ctx():
+                self._cache = self._chunk_call(False, with_img)(
+                    self.params, self._cache, tokens, slot, lo, n_valid,
+                    *img_args)
         jax.block_until_ready(self._cache)           # honest prefill_s
         dt = time.time() - t0
         self.stats["prefill_s"] += dt
@@ -691,9 +798,13 @@ class Scheduler:
         if not completed and self._running:
             bounded = self.interleave_steps if self._admitting else 0
             t0 = time.time()
-            self._state, self._cache = self._burst(
-                self.params, self._state, self._cache,
-                drain and not self._queue and not self._admitting, bounded)
+            dr = drain and not self._queue and not self._admitting
+            if self._mesh is None:
+                self._state, self._cache = self._burst(
+                    self.params, self._state, self._cache, dr, bounded)
+            else:
+                self._state, self._cache = self._sharded_burst(dr, bounded)(
+                    self.params, self._state, self._cache)
             jax.block_until_ready(self._state["done"])
             self.stats["decode_s"] += time.time() - t0
             self.stats["bursts"] += 1
@@ -711,4 +822,6 @@ class Scheduler:
         return out
 
     def decode_steps(self) -> int:
-        return int(jax.device_get(self._state["steps"]))
+        # per-slot counters tick in lockstep on one device; across a mesh
+        # the busiest device's count is the serving-critical-path answer
+        return int(np.max(jax.device_get(self._state["steps"])))

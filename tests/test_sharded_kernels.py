@@ -1,0 +1,184 @@
+"""Tensor-parallel kernel wrappers (kernels.sharded): every shard_map
+wrapper must return bit-identical values to its unsharded dispatcher —
+the N/word axis of the GEMMs and the Hkv axis of the attention kernels
+are data-independent, so sharding them can move work, never bits.
+
+Needs >= 2 devices: run under
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (the multi-device CI
+job does); on a single-device host every test skips.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bitpack import pack_bits
+from repro.kernels import ref
+from repro.kernels._geometry import shard_geometry
+from repro.kernels.binary_gemm import (
+    dispatch_binary_gemm, dispatch_binary_gemm_fused,
+)
+from repro.kernels.decode_attention import v_cache_scale
+
+pytestmark = [
+    pytest.mark.multidevice,
+    pytest.mark.skipif(len(jax.devices()) < 2,
+                       reason="needs simulated devices (see module docstring)"),
+]
+
+
+def _mesh(model: int):
+    from repro.launch.mesh import make_serving_mesh
+    if model > len(jax.devices()):
+        pytest.skip(f"needs {model} devices")
+    return make_serving_mesh(1, model)
+
+
+@pytest.mark.parametrize("m,k,n,parts", [
+    (4, 96, 128, 2),       # word-aligned N shards
+    (7, 130, 256, 4),      # ragged M/K, 4-way split
+])
+@pytest.mark.parametrize("packed_lhs", [False, True])
+def test_binary_gemm_tp_bit_exact(m, k, n, parts, packed_lhs):
+    from repro.kernels.sharded import binary_gemm_tp
+    mesh = _mesh(parts)
+    key = jax.random.PRNGKey(m + k + n)
+    x = jax.random.normal(key, (m, k))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, n))
+    a_p, b_p, kk = ref.pack_operands(x, w)
+    lhs = a_p if packed_lhs else x
+    want = np.asarray(dispatch_binary_gemm(lhs, b_p, kk))
+    got = np.asarray(binary_gemm_tp(lhs, b_p, kk, mesh=mesh))
+    np.testing.assert_array_equal(want, got)
+
+
+@pytest.mark.parametrize("m,k,n,parts", [
+    (4, 96, 128, 2),
+    (5, 64, 256, 4),
+])
+@pytest.mark.parametrize("packed_lhs", [False, True])
+def test_binary_gemm_fused_tp_bit_exact(m, k, n, parts, packed_lhs):
+    from repro.kernels.sharded import binary_gemm_fused_tp
+    mesh = _mesh(parts)
+    key = jax.random.PRNGKey(m * 7 + k + n)
+    x = jax.random.normal(key, (m, k))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, n))
+    a_p, b_p, kk = ref.pack_operands(x, w)
+    th = jax.random.randint(jax.random.fold_in(key, 2), (n,), -5, 5)
+    fl = jax.random.randint(jax.random.fold_in(key, 3), (n,), 0, 2)
+    lhs = a_p if packed_lhs else x
+    want = np.asarray(dispatch_binary_gemm_fused(lhs, b_p, th, fl, kk))
+    got = np.asarray(binary_gemm_fused_tp(lhs, b_p, th, fl, kk, mesh=mesh))
+    np.testing.assert_array_equal(want, got)
+
+
+def test_fused_tp_rejects_unaligned_n_shard():
+    """A 2-way split of N=48 gives 24 columns/device — not a multiple of
+    the 32-bit repack width, so the word axes of the per-device outputs
+    could not be concatenated. Must be rejected, not silently wrong."""
+    from repro.kernels.sharded import binary_gemm_fused_tp
+    mesh = _mesh(2)
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64))
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 48))
+    a_p, b_p, kk = ref.pack_operands(x, w)
+    th = jnp.zeros((48,), jnp.int32)
+    fl = jnp.zeros((48,), jnp.int32)
+    with pytest.raises(AssertionError, match="multiple"):
+        binary_gemm_fused_tp(x, b_p, th, fl, kk, mesh=mesh)
+    shard_geometry.cache_clear()
+
+
+@pytest.mark.parametrize("b,t,hq,hkv,hd,window,parts", [
+    (3, 24, 8, 4, 32, 0, 2),     # GQA 2:1
+    (2, 17, 4, 4, 20, 5, 4),     # MHA, odd hd, sliding window
+])
+def test_decode_attention_tp_bit_exact(b, t, hq, hkv, hd, window, parts):
+    from repro.kernels.sharded import decode_attention_packed_tp
+    mesh = _mesh(parts)
+    key = jax.random.PRNGKey(b * 31 + t)
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (b, 1, hq, hd))
+    kp = pack_bits(jax.random.normal(ks[1], (b, t, hkv, hd)))
+    vf = jax.random.normal(ks[2], (b, t, hkv, hd))
+    vp, vs = pack_bits(vf), v_cache_scale(vf)
+    lens = jax.random.randint(ks[3], (b,), 1, t + 1)
+    want = np.asarray(ref.decode_attention_packed_ref(
+        q, kp, vp, vs, lens, window=window))
+    got = np.asarray(decode_attention_packed_tp(
+        q, kp, vp, vs, lens, mesh=mesh, window=window))
+    np.testing.assert_array_equal(want, got)
+
+
+def test_decode_attention_paged_tp_bit_exact():
+    from repro.kernels.sharded import decode_attention_packed_paged_tp
+    mesh = _mesh(2)
+    b, np_, ps, pool, hkv, g, hd = 3, 4, 8, 16, 2, 3, 32
+    key = jax.random.PRNGKey(11)
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (b, 1, hkv * g, hd))
+    kp = pack_bits(jax.random.normal(ks[1], (pool, ps, hkv, hd)))
+    vf = jax.random.normal(ks[2], (pool, ps, hkv, hd))
+    vp = pack_bits(vf)
+    vs = jnp.abs(jax.random.normal(ks[3], (b, hkv))) + 0.1
+    # distinct pages per row, some sentinel (== pool) tail entries
+    pt = np.full((b, np_), pool, np.int32)
+    perm = np.random.default_rng(0).permutation(pool)[:b * np_]
+    for i in range(b):
+        pt[i, :3] = perm[i * 3:i * 3 + 3]
+    pt = jnp.asarray(pt)
+    lens = jax.random.randint(ks[4], (b,), 1, 3 * ps + 1)
+    want = np.asarray(ref.decode_attention_packed_paged_ref(
+        q, kp, vp, vs, pt, lens))
+    got = np.asarray(decode_attention_packed_paged_tp(
+        q, kp, vp, vs, pt, lens, mesh=mesh))
+    np.testing.assert_array_equal(want, got)
+
+
+@pytest.mark.parametrize("parts", [2, 4])
+def test_prefill_attention_tp_bit_exact(parts):
+    from repro.kernels.sharded import prefill_attention_packed_tp
+    mesh = _mesh(parts)
+    b, s, t, hkv, g, hd = 2, 6, 32, 4, 2, 24
+    key = jax.random.PRNGKey(5)
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (b, s, hkv * g, hd))
+    kp = pack_bits(jax.random.normal(ks[1], (b, t, hkv, hd)))
+    vf = jax.random.normal(ks[2], (b, t, hkv, hd))
+    vp, vs = pack_bits(vf), v_cache_scale(vf)
+    pos = jax.random.randint(ks[3], (b,), 0, t - s)
+    lens = pos + s
+    want = np.asarray(ref.prefill_attention_packed_ref(
+        q, kp, vp, vs, lens, pos))
+    got = np.asarray(prefill_attention_packed_tp(
+        q, kp, vp, vs, lens, pos, mesh=mesh))
+    np.testing.assert_array_equal(want, got)
+
+
+def test_prefill_attention_paged_tp_bit_exact():
+    from repro.kernels.sharded import prefill_attention_packed_paged_tp
+    mesh = _mesh(2)
+    b, s, np_, ps, pool, hkv, g, hd = 2, 4, 3, 8, 8, 2, 2, 16
+    key = jax.random.PRNGKey(9)
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (b, s, hkv * g, hd))
+    kp = pack_bits(jax.random.normal(ks[1], (pool, ps, hkv, hd)))
+    vf = jax.random.normal(ks[2], (pool, ps, hkv, hd))
+    vp = pack_bits(vf)
+    vs = jnp.abs(jax.random.normal(ks[3], (b, hkv))) + 0.1
+    pt = jnp.asarray(np.stack([np.arange(np_), np_ + np.arange(np_)]),
+                     jnp.int32)
+    pos = jnp.asarray([3, 9], jnp.int32)
+    lens = pos + s
+    want = np.asarray(ref.prefill_attention_packed_paged_ref(
+        q, kp, vp, vs, pt, lens, pos))
+    got = np.asarray(prefill_attention_packed_paged_tp(
+        q, kp, vp, vs, pt, lens, pos, mesh=mesh))
+    np.testing.assert_array_equal(want, got)
+
+
+def test_shard_geometry_validation():
+    g = shard_geometry(128, 4, name="n", multiple=32)
+    assert g.local == 32
+    with pytest.raises(AssertionError, match="divide"):
+        shard_geometry(10, 4, name="hkv")
+    shard_geometry.cache_clear()
