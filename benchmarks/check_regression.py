@@ -45,10 +45,17 @@ PAIRS = [
 #   devices: per-device decode-step time must thin with the slot shard.
 #   sharded_bytes_per_device_shrink_4x — cache+state bytes/device ratio
 #   1 -> 4 devices, from real shard sizes (bench_sharded_serving).
+#   resilience_goodput_frac — completed/submitted under the deterministic
+#   fault schedule (bench_resilience: only the expired deadlines and the
+#   poisoned admission may be lost; every other fault class degrades).
+#   resilience_accounted_frac — every submitted rid resolves to exactly
+#   one of completed/shed/error; anything below 1.0 is a lost request.
 FLOORS = [
     ("prefill_saved_frac", 0.5),
     ("sharded_tok_s_scaling_4x", 1.5),
     ("sharded_bytes_per_device_shrink_4x", 3.0),
+    ("resilience_goodput_frac", 0.6),
+    ("resilience_accounted_frac", 1.0),
 ]
 
 

@@ -26,6 +26,12 @@ _record.py).
                              over the paged packed pool vs contiguous
                              chunked: prefill tokens saved, TTFT, pool
                              bytes packed vs float)
+  fault-tolerant serving  -> bench_resilience (goodput + shed/error
+                             accounting under a deterministic fault
+                             schedule: burst errors retried, poisoned
+                             admission isolated, exhaustion requeued,
+                             corruption degraded — survivors bit-identical
+                             to the fault-free run)
   mesh-sharded serving    -> bench_sharded_serving (slot batch sharded over
                              a device mesh: modeled tok/s scaling,
                              bytes/device from real shards, replica fit —
@@ -49,13 +55,14 @@ def main() -> None:
         bench_accuracy, bench_binary_gemm, bench_bit_resident,
         bench_continuous_serving, bench_convergence, bench_decode_attention,
         bench_energy, bench_kernel_dedup, bench_packed_serving,
-        bench_prefill_interleave, bench_prefix_cache, bench_saturation,
-        bench_sharded_serving,
+        bench_prefill_interleave, bench_prefix_cache, bench_resilience,
+        bench_saturation, bench_sharded_serving,
     )
     from benchmarks._record import record
     mods = [bench_energy, bench_binary_gemm, bench_packed_serving,
             bench_continuous_serving, bench_prefill_interleave,
-            bench_prefix_cache, bench_sharded_serving, bench_bit_resident,
+            bench_prefix_cache, bench_resilience, bench_sharded_serving,
+            bench_bit_resident,
             bench_decode_attention, bench_kernel_dedup, bench_accuracy,
             bench_saturation, bench_convergence]
     # these record their own trajectory entries (rows + structured extras),
@@ -63,7 +70,7 @@ def main() -> None:
     self_recording = {bench_bit_resident, bench_decode_attention,
                       bench_packed_serving, bench_continuous_serving,
                       bench_prefill_interleave, bench_prefix_cache,
-                      bench_sharded_serving}
+                      bench_resilience, bench_sharded_serving}
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")
     for mod in mods:

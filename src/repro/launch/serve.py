@@ -70,6 +70,19 @@ def main() -> None:
                     help="data-parallel replica serving: one request queue "
                          "fans out to this many single-device engines "
                          "(serving.replica; exclusive with --mesh/--queue)")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="per-request TTFT deadline in seconds (--queue "
+                         "mode): requests still queued past it are shed "
+                         "before burning prefill compute (0 = none)")
+    ap.add_argument("--queue-cap", type=int, default=0,
+                    help="bounded admission queue: submissions beyond this "
+                         "many queued requests are rejected with "
+                         "backpressure (0 = unbounded)")
+    ap.add_argument("--inject-faults", default="",
+                    help="deterministic fault plan, comma-separated "
+                         "kind@site:index[*times][:param] entries, e.g. "
+                         "'device_error@burst:2*3,slow@burst:6:0.05,"
+                         "death@replica0:1' (serving.faults)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -80,6 +93,13 @@ def main() -> None:
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = get_model(cfg)
+    if args.inject_faults:
+        from repro.serving.faults import parse_plan
+        args.fault_plan = parse_plan(args.inject_faults)
+        print(f"fault plan armed: {len(args.fault_plan.faults)} fault(s) — "
+              f"{args.inject_faults}")
+    else:
+        args.fault_plan = None
     key = jax.random.PRNGKey(args.seed)
     if args.ckpt:
         from repro.checkpoint.manager import CheckpointManager
@@ -108,7 +128,9 @@ def main() -> None:
                         prefill_chunk=args.prefill_chunk or None,
                         page_size=args.page_size or None,
                         pool_pages=args.pool_pages or None,
-                        prefix_cache=args.prefix_cache)
+                        prefix_cache=args.prefix_cache,
+                        queue_cap=args.queue_cap or None,
+                        fault_plan=args.fault_plan)
     if eng.frozen:
         rb = eng.resident_weight_bytes()
         total = rb["binary"] + rb["other"]
@@ -169,6 +191,7 @@ def _serve_replicas(cfg, params, *, rng_seed: int, args) -> None:
         f"--replicas {args.replicas} > {len(devs)} devices " \
         f"(simulate with XLA_FLAGS=--xla_force_host_platform_device_count=N)"
     srv = ReplicaServer(cfg, params, devices=devs[:args.replicas],
+                        fault_plan=args.fault_plan,
                         max_len=args.prompt_len + args.max_new + 1,
                         freeze=args.freeze, slots=args.slots, seed=args.seed,
                         kv_bits=args.kv_bits,
@@ -187,8 +210,9 @@ def _serve_replicas(cfg, params, *, rng_seed: int, args) -> None:
     outs = srv.generate(reqs)
     wall = time.time() - t0
     st = srv.stats()
-    print(f"{st['replicas']} replicas served {len(outs)} requests in "
-          f"{wall:.3f}s | {st['tokens_out']/wall:.1f} tok/s aggregate")
+    print(f"{st['replicas']} replicas ({st['healthy']} healthy, "
+          f"{st['failovers']} failover rounds) served {len(outs)} requests "
+          f"in {wall:.3f}s | {st['tokens_out']/wall:.1f} tok/s aggregate")
     for e in st["per_replica"]:
         line = (f"  {e['device']}: {e['weight_bytes']/1e6:.2f} MB weights + "
                 f"{e['cache_bytes']/1e6:.3f} MB cache")
@@ -211,15 +235,20 @@ def _serve_replicas(cfg, params, *, rng_seed: int, args) -> None:
 
 def _serve_queue(eng, cfg, rng, args) -> None:
     """Stream `--batch` mixed-length requests through the scheduler with
-    exponential inter-arrival gaps (`--arrival-rate` req/s)."""
+    exponential inter-arrival gaps (`--arrival-rate` req/s). `--deadline`
+    sets each request's TTFT deadline (late ones shed); `--queue-cap`
+    bounds the admission queue (overflow rejected with backpressure);
+    `--inject-faults` arms the scheduler's fault plan."""
     from repro.serving.engine import Request
+    from repro.serving.faults import QueueFull
 
     sched = eng.scheduler()
     lo = max(1, args.prompt_len // 4)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab,
                                         int(rng.integers(lo, args.prompt_len + 1)),
                                         dtype=np.int32),
-                    max_new_tokens=int(rng.integers(1, args.max_new + 1)))
+                    max_new_tokens=int(rng.integers(1, args.max_new + 1)),
+                    deadline_s=args.deadline or None)
             for _ in range(args.batch)]
     if args.arrival_rate > 0:
         gaps = rng.exponential(1.0 / args.arrival_rate, size=len(reqs))
@@ -234,7 +263,12 @@ def _serve_queue(eng, cfg, rng, args) -> None:
         now = time.time() - t0
         while pending and pending[0][0] <= now:
             _, req = pending.pop(0)
-            rid = sched.submit(req)
+            try:
+                rid = sched.submit(req)
+            except QueueFull:
+                print(f"t={now:7.3f}s REJECT (queue at cap "
+                      f"{sched.queue_cap}) prompt={req.prompt.size}")
+                continue
             print(f"t={now:7.3f}s submit rid={rid} "
                   f"prompt={req.prompt.size} max_new={req.max_new_tokens}")
         if sched.idle and pending:
@@ -243,6 +277,11 @@ def _serve_queue(eng, cfg, rng, args) -> None:
         # non-drain poll: yield at every completion so slots stay
         # admittable for requests arriving mid-flight
         for c in sched.poll(drain=not pending):
+            if c.status != "completed":
+                print(f"t={time.time()-t0:7.3f}s {c.status.upper():6s} "
+                      f"rid={c.rid}" +
+                      (f" ({c.error})" if c.error else ""))
+                continue
             lats.append(c.latency)
             ttfts.append(c.ttft)
             itls.extend(c.itl.tolist())
@@ -255,13 +294,21 @@ def _serve_queue(eng, cfg, rng, args) -> None:
     # wall times below are honest compute times: the scheduler syncs the
     # device before every clock read (prefill_s / decode_s / per-token)
     itl_p99 = f"{np.percentile(itls, 99)*1e3:.1f}ms" if itls else "n/a"
-    print(f"served {len(lats)} requests in {wall:.3f}s | "
-          f"{sched.stats['tokens_out']/wall:.1f} tok/s | "
-          f"latency p50 {np.percentile(lats, 50)*1e3:.1f}ms "
-          f"p99 {np.percentile(lats, 99)*1e3:.1f}ms | "
-          f"ttft p50 {np.percentile(ttfts, 50)*1e3:.1f}ms "
-          f"p99 {np.percentile(ttfts, 99)*1e3:.1f}ms | "
-          f"inter-token p99 {itl_p99}")
+    if lats.size:
+        print(f"served {len(lats)} requests in {wall:.3f}s | "
+              f"{sched.stats['tokens_out']/wall:.1f} tok/s | "
+              f"latency p50 {np.percentile(lats, 50)*1e3:.1f}ms "
+              f"p99 {np.percentile(lats, 99)*1e3:.1f}ms | "
+              f"ttft p50 {np.percentile(ttfts, 50)*1e3:.1f}ms "
+              f"p99 {np.percentile(ttfts, 99)*1e3:.1f}ms | "
+              f"inter-token p99 {itl_p99}")
+    s = sched.stats
+    if any(s[k] for k in ("shed", "errors", "rejected", "burst_retries",
+                          "invariant_violations")):
+        print(f"resilience: {s['shed']} shed, {s['errors']} errored, "
+              f"{s['rejected']} rejected at cap, {s['burst_retries']} "
+              f"burst retries, {s['invariant_violations']} invariant "
+              f"violations (degraded to cache bypass)")
     print(f"decode steps {sched.decode_steps()} "
           f"bursts {sched.stats['bursts']} | "
           f"prefill {sched.stats['prefill_s']:.3f}s "

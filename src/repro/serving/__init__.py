@@ -1,4 +1,12 @@
-"""Serving runtime: continuous-batching scheduler + engine + sampling."""
+"""Serving runtime: continuous-batching scheduler + engine + sampling,
+with fault injection and typed serving errors (serving.faults)."""
 from repro.serving.engine import Request, Scheduler, ServingEngine
+from repro.serving.faults import (FaultPlan, InvariantViolation, QueueFull,
+                                  ReplicaDead, RequestError, ServingError,
+                                  TransientDeviceError, parse_plan)
 
-__all__ = ["Request", "Scheduler", "ServingEngine"]
+__all__ = [
+    "Request", "Scheduler", "ServingEngine",
+    "FaultPlan", "parse_plan", "ServingError", "RequestError", "QueueFull",
+    "TransientDeviceError", "ReplicaDead", "InvariantViolation",
+]

@@ -65,7 +65,9 @@ class ServingEngine:
                  seed: int = 0, kv_bits: int | None = None,
                  prefill_chunk: int | None = None,
                  interleave_steps: int = 8, page_size: int | None = None,
-                 pool_pages: int | None = None, prefix_cache: bool = False):
+                 pool_pages: int | None = None, prefix_cache: bool = False,
+                 queue_cap: int | None = None, overflow: str = "reject",
+                 fault_plan=None, check_invariants: bool | None = None):
         if kv_bits is not None:
             if kv_bits not in (0, 1):
                 raise ValueError(f"kv_bits must be 0 (float cache) or 1 "
@@ -82,6 +84,10 @@ class ServingEngine:
         self.page_size = page_size
         self.pool_pages = pool_pages
         self.prefix_cache = prefix_cache
+        self.queue_cap = queue_cap
+        self.overflow = overflow
+        self.fault_plan = fault_plan
+        self.check_invariants = check_invariants
         self.frozen = params_frozen(params)
         self._key = jax.random.PRNGKey(seed)
         self._sched: Scheduler | None = None
@@ -270,27 +276,41 @@ class ServingEngine:
                                     page_size=self.page_size,
                                     pool_pages=self.pool_pages,
                                     prefix_cache=self.prefix_cache,
-                                    mesh=self.mesh)
+                                    mesh=self.mesh,
+                                    queue_cap=self.queue_cap,
+                                    overflow=self.overflow,
+                                    fault_plan=self.fault_plan,
+                                    check_invariants=self.check_invariants)
             if self.mesh is not None:
                 # the scheduler replicated the params over the mesh —
                 # serve the engine's other paths from the same placement
                 self.params = self._sched.params
         return self._sched
 
-    def generate(self, requests: list[Request], key=None) -> list[np.ndarray]:
-        """Generate for a batch of requests — ragged prompt lengths,
-        per-request budgets/eos — through the slot scheduler.
-
-        With temperature > 0 and no explicit `key`, samples draw from the
-        engine's held key, split per call: repeated calls give fresh
-        samples; pass `key` to reproduce a draw.
-        """
+    def serve(self, requests: list[Request], key=None) -> list:
+        """Like `generate`, but returns the full `Completion` objects —
+        including `status` ('completed' / 'shed' / 'error') and `error` —
+        in request order. `generate` is the tokens-only shim over this;
+        resilience-aware callers (ReplicaServer failover, benchmarks)
+        need the statuses to account for every request exactly once."""
         assert requests, "empty batch"
         sched = self.scheduler()
         sched.reseed(key if key is not None else self._next_key())
         rids = [sched.submit(r) for r in requests]
         comps = sched.run()
-        return [comps[rid].tokens for rid in rids]
+        return [comps[rid] for rid in rids]
+
+    def generate(self, requests: list[Request], key=None) -> list[np.ndarray]:
+        """Generate for a batch of requests — ragged prompt lengths,
+        per-request budgets/eos — through the slot scheduler. Shed or
+        errored requests come back as empty token arrays (use `serve`
+        for the statuses).
+
+        With temperature > 0 and no explicit `key`, samples draw from the
+        engine's held key, split per call: repeated calls give fresh
+        samples; pass `key` to reproduce a draw.
+        """
+        return [c.tokens for c in self.serve(requests, key=key)]
 
     def generate_static(self, requests: list[Request], key=None
                         ) -> list[np.ndarray]:

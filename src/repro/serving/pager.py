@@ -33,7 +33,14 @@ never touches device memory. Ownership model:
 
 Invariants (asserted here, property-tested in tests/test_pager.py):
 refcounts never go negative, a page is free iff its refcount is 0, and
-no operation ever frees a page that still has a holder.
+no operation ever frees a page that still has a holder. `audit()`
+returns violations as strings instead of asserting — the scheduler's
+invariant watchdog runs it at burst boundaries (REPRO_CHECK_INVARIANTS)
+and degrades rather than crashes; `check()` stays assert-based for
+tests. Pass `fault_plan` (serving.faults) to make `alloc` consult the
+'alloc' site — an armed 'exhaust' fault makes it return None exactly as
+if the pool were full, which is how admission's evict-and-retry /
+requeue paths get exercised deterministically.
 """
 from __future__ import annotations
 
@@ -43,12 +50,13 @@ __all__ = ["PagePool"]
 
 
 class PagePool:
-    def __init__(self, n_pages: int):
+    def __init__(self, n_pages: int, fault_plan=None):
         assert n_pages >= 1
         self.n_pages = n_pages
         self.refs = np.zeros((n_pages,), np.int32)
         # LIFO free stack, lowest ids on top — determinism for tests
         self._free = list(range(n_pages - 1, -1, -1))
+        self.fault_plan = fault_plan
 
     def free_count(self) -> int:
         return len(self._free)
@@ -60,6 +68,9 @@ class PagePool:
     def alloc(self, n: int) -> list[int] | None:
         """n fresh pages at refcount 1, or None (all-or-nothing)."""
         assert n >= 0
+        if self.fault_plan is not None:
+            if any(f.kind == "exhaust" for f in self.fault_plan.tick("alloc")):
+                return None        # injected exhaustion: pool "full"
         if n > len(self._free):
             return None
         pages = [self._free.pop() for _ in range(n)]
@@ -97,14 +108,28 @@ class PagePool:
         self.refs[page] -= 1          # caller's ref moves to the copy
         return got[0]
 
+    def audit(self) -> list[str]:
+        """Pool invariants as violation strings (empty == consistent):
+        refcounts non-negative, no duplicate free-list entries, and a
+        page is on the free list iff its refcount is 0. The watchdog's
+        non-crashing twin of `check()`."""
+        out = []
+        if (self.refs < 0).any():
+            out.append(f"negative refcounts at pages "
+                       f"{np.nonzero(self.refs < 0)[0].tolist()}")
+        free = set(self._free)
+        if len(free) != len(self._free):
+            out.append("free list holds duplicates (double-free)")
+        for p in range(self.n_pages):
+            if (self.refs[p] == 0) != (p in free):
+                out.append(f"page {p}: refs={self.refs[p]} "
+                           f"free={p in free}")
+        return out
+
     def check(self) -> None:
         """Assert the pool invariants (tests call this after every op)."""
-        assert (self.refs >= 0).all()
-        free = set(self._free)
-        assert len(free) == len(self._free), "double-free"
-        for p in range(self.n_pages):
-            assert (self.refs[p] == 0) == (p in free), \
-                f"page {p}: refs={self.refs[p]} free={p in free}"
+        violations = self.audit()
+        assert not violations, "\n".join(violations)
 
     def stats(self) -> dict:
         return {"pages": self.n_pages, "free": len(self._free),

@@ -146,6 +146,66 @@ class PrefixCache:
             self.evicted += 1
         return freed
 
+    # -- watchdog API --------------------------------------------------------
+    def _nodes(self) -> list[_Node]:
+        out, stack = [], [self.root]
+        while stack:
+            children = stack.pop()
+            for node in children.values():
+                out.append(node)
+                stack.append(node.children)
+        return out
+
+    def pages(self) -> list[int]:
+        """Every page id the tree currently holds a reference to (one
+        per node) — the scheduler's ledger audit counts these against
+        the pool's refcounts."""
+        return [n.page for n in self._nodes()]
+
+    def audit(self) -> list[str]:
+        """Tree/refcount invariants as violation strings (empty ==
+        consistent): every node's page is a valid pool id the pool still
+        counts a reference for (the tree's own reference), and no two
+        nodes claim the same page (insert moves ownership, never shares
+        it). Run by the scheduler's watchdog at burst boundaries."""
+        out, seen = [], set()
+        for node in self._nodes():
+            if not 0 <= node.page < self.pool.n_pages:
+                out.append(f"tree node references out-of-range page "
+                           f"{node.page}")
+                continue
+            if self.pool.refs[node.page] < 1:
+                out.append(f"tree node references page {node.page} with "
+                           f"pool refcount {int(self.pool.refs[node.page])}")
+            if node.page in seen:
+                out.append(f"two tree nodes claim page {node.page}")
+            seen.add(node.page)
+        return out
+
+    def clear(self) -> int:
+        """Drop every node and release the tree's page references — the
+        watchdog's degradation path (cache-bypass): slots keep their own
+        references, so in-flight requests are untouched. Defensive by
+        design: a corrupted node whose page the pool no longer counts is
+        skipped rather than asserted on. Returns pages actually freed."""
+        freed = 0
+        for node in self._nodes():
+            if 0 <= node.page < self.pool.n_pages and \
+                    self.pool.refs[node.page] > 0:
+                freed += len(self.pool.decref([node.page]))
+        self.root = {}
+        return freed
+
+    def corrupt(self) -> None:
+        """Fault-injection helper (FaultPlan kind 'corrupt'): graft a node
+        whose page the pool does not count a reference for — exactly the
+        inconsistency a buggy insert/evict interleaving would leave, and
+        what `audit()` exists to catch. Never called outside injection."""
+        free = np.nonzero(self.pool.refs == 0)[0]
+        page = int(free[0]) if free.size else self.pool.n_pages
+        self.root[("corrupt",) * self.page_size] = \
+            _Node(page, None, self._tick())
+
     # -- introspection ------------------------------------------------------
     @property
     def n_pages(self) -> int:

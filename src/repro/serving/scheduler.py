@@ -69,11 +69,31 @@ the tree; LRU unpinned leaves are evicted only when an admission needs
 pages and the pool is full. Paging is a pure addressing change: outputs
 are asserted token-identical to the contiguous slot cache, and
 recurrent (SSM/hybrid) state stays unpaged — it is O(1) per slot.
+
+Resilience (`serving.faults`): `submit` validates requests up front and
+raises typed `RequestError`s instead of failing deep inside a jit; a
+bounded admission queue (`queue_cap`) applies backpressure — `submit`
+raises `QueueFull` (policy "reject") or serves until space frees
+(policy "block"); requests whose `deadline_s` TTFT deadline already
+passed are shed at admission, before they burn any prefill compute
+(`Completion.status == "shed"`); a poison request — non-finite logits
+(flagged per-row inside the jit), an injected admission fault, or a
+page allocation that stays unsatisfiable after eviction retries —
+retires alone with `status == "error"` while every other slot keeps
+decoding bit-identically (per-row compute is independent; the poison
+only ever touched its own logits). Decode bursts consult an injectable
+`FaultPlan` and retry transient device errors with exponential backoff
+(the fault fires before the jit call, so the retried burst is
+bit-identical); an invariant watchdog audits the page pool + prefix
+tree + cross-layer refcounts at burst boundaries under
+`REPRO_CHECK_INVARIANTS=1` (tests enable it globally) and degrades a
+corrupted prefix tree to cache-bypass rather than crashing.
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
+import os
 import time
 from collections import deque
 from typing import Any
@@ -87,6 +107,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig
 from repro.kernels import tune
 from repro.models.api import Model, PAGED, cache_batch_axes
+from repro.serving.faults import (FaultPlan, InvariantViolation, QueueFull,
+                                  RequestError, TransientDeviceError)
 from repro.serving.pager import PagePool
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampling import request_key, sample_tokens, step_keys
@@ -101,6 +123,10 @@ class Request:
     temperature: float = 0.0     # 0 => greedy
     eos_id: int | None = None    # stop early when this token is sampled
     img_emb: np.ndarray | None = None   # vlm only: (n_img_tokens, d_vision)
+    # TTFT deadline in seconds from submit: a request still queued when it
+    # expires is shed at admission instead of burning prefill compute
+    deadline_s: float | None = None
+    priority: int = 0            # higher admits first; ties go by rid (FIFO)
 
 
 @dataclasses.dataclass
@@ -128,6 +154,12 @@ class Completion:
     # the head-of-line blocking the interleave benchmark asserts on
     itl: np.ndarray = dataclasses.field(
         default_factory=lambda: np.zeros((0,)))
+    # how this rid resolved — every submitted rid resolves to EXACTLY one
+    # of: "completed" (served its tokens), "shed" (TTFT deadline passed
+    # before admission; no compute spent), "error" (poisoned: non-finite
+    # logits, an injected admission fault, or unsatisfiable page alloc)
+    status: str = "completed"
+    error: str | None = None     # human-readable cause when status=="error"
 
 
 @dataclasses.dataclass
@@ -148,6 +180,7 @@ class _Admission:
     n_chunks: int
     next: int = 0
     start: int = 0      # prompt tokens served from the prefix cache
+    poison: float = 0.0  # injected NaN added to first-token logits
 
 
 class Scheduler:
@@ -171,13 +204,29 @@ class Scheduler:
                  key: Array | None = None, prefill_chunk: int | None = None,
                  interleave_steps: int = 8, page_size: int | None = None,
                  pool_pages: int | None = None, prefix_cache: bool = False,
-                 mesh=None):
+                 mesh=None, queue_cap: int | None = None,
+                 overflow: str = "reject",
+                 fault_plan: FaultPlan | None = None,
+                 check_invariants: bool | None = None,
+                 burst_retries: int = 3, backoff_s: float = 0.01):
         assert prefill_chunk is None or prefill_chunk >= 1
+        assert overflow in ("reject", "block"), overflow
+        assert queue_cap is None or queue_cap >= 1
         self.cfg, self.model, self.params = cfg, model, params
         self.n_slots, self.max_len = n_slots, max_len
         self.max_out = max_len
         self.prefill_chunk = prefill_chunk
         self.interleave_steps = interleave_steps
+        self.queue_cap, self.overflow = queue_cap, overflow
+        self._faults = fault_plan
+        self.burst_retries, self.backoff_s = burst_retries, backoff_s
+        # invariant watchdog: explicit arg wins; default to the env knob
+        # (tests/conftest.py sets REPRO_CHECK_INVARIANTS=1 globally)
+        self._check_inv = (check_invariants if check_invariants is not None
+                           else os.environ.get("REPRO_CHECK_INVARIANTS") == "1")
+        self.last_violations: list[str] = []
+        self._done_buf: list[Completion] = []   # completions harvested
+        # inside a blocking submit, delivered by the next poll()
         # paged KV applies to the attention families only — mamba/rg
         # recurrent state is O(1) per slot and stays slot-resident
         attn_fam = cfg.family in ("dense", "moe", "audio", "vlm")
@@ -193,7 +242,7 @@ class Scheduler:
                                else n_slots * self.n_pages)
             cache_kw = {"page_size": page_size,
                         "pool_pages": self.pool_pages}
-            self._pager = PagePool(self.pool_pages)
+            self._pager = PagePool(self.pool_pages, fault_plan=fault_plan)
             self._slot_pages: dict[int, list[int]] = {}
         # the prefix tree shares full pages across requests with equal
         # token prefixes; vlm is excluded — its image embeddings condition
@@ -233,7 +282,9 @@ class Scheduler:
         self.stats = {"prefill_tokens": 0, "prefill_s": 0.0, "bursts": 0,
                       "decode_s": 0.0, "tokens_out": 0, "completed": 0,
                       "max_admit_stall_tokens": 0,
-                      "prefill_tokens_saved": 0, "prefix_hits": 0}
+                      "prefill_tokens_saved": 0, "prefix_hits": 0,
+                      "shed": 0, "errors": 0, "rejected": 0,
+                      "burst_retries": 0, "invariant_violations": 0}
 
         self._cache = model.init_cache(n_slots, max_len, **cache_kw)
         self._state = {
@@ -247,6 +298,11 @@ class Scheduler:
             "rkey": jnp.zeros((n_slots, 2), jnp.uint32),
             "outs": jnp.zeros((n_slots, self.max_out), jnp.int32),
             "done": jnp.zeros((n_slots,), bool),
+            # poison flag: row produced non-finite logits (computed inside
+            # the jit — one isfinite reduction over logits the step already
+            # holds); a flagged row finishes immediately and harvests as
+            # status="error" while its neighbors are untouched
+            "err": jnp.zeros((n_slots,), bool),
             # per-slot so the state tree shards uniformly on axis 0; all
             # rows of one device tick together, decode_steps() takes max
             "steps": jnp.zeros((n_slots,), jnp.int32),
@@ -261,12 +317,12 @@ class Scheduler:
         out_sh = (None if mesh is None
                   else (self._state_sh, self._cache_sh))
         self._admit_jit = jax.jit(
-            lambda p, st, c, t, slot, rkey, b, tp, e: self._admit_impl(
-                p, st, c, t, slot, rkey, b, tp, e, None),
+            lambda p, st, c, t, slot, rkey, b, tp, e, po: self._admit_impl(
+                p, st, c, t, slot, rkey, b, tp, e, None, po),
             donate_argnums=(1, 2), out_shardings=out_sh)
         self._admit_img_jit = jax.jit(
-            lambda p, st, c, t, img, slot, rkey, b, tp, e: self._admit_impl(
-                p, st, c, t, slot, rkey, b, tp, e, img),
+            lambda p, st, c, t, img, slot, rkey, b, tp, e, po:
+            self._admit_impl(p, st, c, t, slot, rkey, b, tp, e, img, po),
             donate_argnums=(1, 2), out_shardings=out_sh)
         self._burst = jax.jit(self._burst_impl, donate_argnums=(1, 2),
                               static_argnums=(3, 4))
@@ -357,11 +413,14 @@ class Scheduler:
 
     # -- device-side pieces -------------------------------------------------
     def _admit_impl(self, params, state, cache, tokens, slot, rkey,
-                    budget, temp, eos, img):
+                    budget, temp, eos, img, poison):
         """Prefill one request (batch 1), write its cache/state rows into
         `slot`, and sample its first token — one fused jit call per
         admission. Scalars are traced, so admission compiles once per
-        prompt-length bucket and never per value."""
+        prompt-length bucket and never per value. `poison` is a traced
+        scalar added to the first-token logits — 0.0 in normal operation
+        (a no-op on the values), NaN when a fault plan poisons this
+        admission, which trips the in-jit non-finite flag below."""
         kw = dict(self._pkw)
         if img is not None:
             kw["img_emb"] = img
@@ -372,10 +431,10 @@ class Scheduler:
                 c, s.astype(c.dtype), slot, axis=ax),
             cache, slot_cache, self._axes)
         return self._first_token(state, cache, logits1, slot, prompt_len,
-                                 rkey, budget, temp, eos)
+                                 rkey, budget, temp, eos, poison)
 
     def _chunk_final_impl(self, params, state, cache, tokens, slot, pos,
-                          n_valid, rkey, budget, temp, eos, img):
+                          n_valid, rkey, budget, temp, eos, img, poison):
         """Last chunk of a chunked admission: advance the slot cache by the
         chunk, then sample the first token and arm the slot's decode state
         — the chunked twin of `_admit_impl`'s tail."""
@@ -383,14 +442,18 @@ class Scheduler:
         logits1, cache = self.model.prefill_chunk(params, tokens, cache,
                                                   slot, pos, n_valid, **kw)
         return self._first_token(state, cache, logits1, slot, pos + n_valid,
-                                 rkey, budget, temp, eos)
+                                 rkey, budget, temp, eos, poison)
 
     def _first_token(self, state, cache, logits1, slot, prompt_len, rkey,
-                     budget, temp, eos):
+                     budget, temp, eos, poison=0.0):
+        logits1 = logits1 + jnp.asarray(poison, jnp.float32)
         temp = jnp.asarray(temp, jnp.float32)
         tok = sample_tokens(logits1, jax.random.fold_in(rkey, 0)[None],
                             temp[None])[0]
-        finished = (tok == eos) | (budget <= 1)
+        # a poisoned first token (non-finite logits: model pathology or an
+        # injected NaN) finishes the slot immediately with the err flag set
+        bad = ~jnp.isfinite(logits1).all()
+        finished = bad | (tok == eos) | (budget <= 1)
         state = {
             "cur": state["cur"].at[slot].set(tok),
             "pos": state["pos"].at[slot].set(prompt_len),
@@ -402,6 +465,7 @@ class Scheduler:
             "rkey": state["rkey"].at[slot].set(rkey),
             "outs": state["outs"].at[slot].set(0).at[slot, 0].set(tok),
             "done": state["done"].at[slot].set(finished),
+            "err": state["err"].at[slot].set(bad),
             "steps": state["steps"],
         }
         return state, cache
@@ -438,14 +502,18 @@ class Scheduler:
             keys = step_keys(st["rkey"], st["out_len"])
             nxt = sample_tokens(logits, keys, st["temp"])
             nxt = jnp.where(act, nxt, st["cur"])
+            # per-row poison isolation: a row whose logits went non-finite
+            # finishes NOW with err set; neighbors never see its values
+            bad = act & ~jnp.isfinite(logits).all(axis=-1)
             # inactive rows write out of bounds -> dropped
             idx = jnp.where(act, st["out_len"], self.max_out)
             outs = st["outs"].at[rows, idx].set(nxt, mode="drop")
             out_len = st["out_len"] + act
-            finished = act & ((nxt == st["eos"]) | (out_len >= st["budget"]))
+            finished = act & (bad | (nxt == st["eos"])
+                              | (out_len >= st["budget"]))
             st = dict(st, cur=nxt, pos=st["pos"] + act, active=act & ~finished,
                       out_len=out_len, outs=outs, done=st["done"] | finished,
-                      steps=st["steps"] + 1)
+                      err=st["err"] | bad, steps=st["steps"] + 1)
             return st, cache
 
         return jax.lax.while_loop(cond, body, (state, cache))
@@ -458,17 +526,63 @@ class Scheduler:
         self._base_key = key
         self._key_rid0 = self._next_rid
 
-    def submit(self, req: Request) -> int:
-        prompt = np.asarray(req.prompt, np.int32)
-        assert prompt.ndim == 1 and prompt.size >= 1, "prompt must be (S,)"
-        assert req.max_new_tokens >= 1
-        assert prompt.size + req.max_new_tokens <= self.max_len, \
-            f"{prompt.size}+{req.max_new_tokens} exceeds max_len={self.max_len}"
+    def _validate(self, req: Request) -> np.ndarray:
+        """Reject a malformed request HERE, with a typed RequestError that
+        names the problem — not ten frames deep in an admission jit with
+        an opaque shape error. Returns the canonicalized int32 prompt."""
+        prompt = np.asarray(req.prompt)
+        if prompt.ndim != 1 or prompt.size < 1:
+            raise RequestError(f"prompt must be a non-empty 1-D token "
+                               f"array, got shape {prompt.shape}")
+        if not np.issubdtype(prompt.dtype, np.integer):
+            raise RequestError(f"prompt must hold integer token ids, got "
+                               f"dtype {prompt.dtype}")
+        lo, hi = int(prompt.min()), int(prompt.max())
+        if lo < 0 or hi >= self.cfg.vocab:
+            raise RequestError(f"prompt token ids must lie in "
+                               f"[0, {self.cfg.vocab}), got [{lo}, {hi}]")
+        if req.max_new_tokens < 1:
+            raise RequestError(f"max_new_tokens must be >= 1, got "
+                               f"{req.max_new_tokens}")
+        if prompt.size + req.max_new_tokens > self.max_len:
+            raise RequestError(
+                f"prompt ({prompt.size}) + max_new_tokens "
+                f"({req.max_new_tokens}) exceeds max_len={self.max_len}")
+        if req.deadline_s is not None and req.deadline_s < 0:
+            raise RequestError(f"deadline_s must be >= 0, got "
+                               f"{req.deadline_s}")
+        if self.cfg.family == "vlm":
+            if req.img_emb is None:
+                raise RequestError("vlm request needs img_emb")
+            shape = np.asarray(req.img_emb).shape
+            want = (self.cfg.n_img_tokens, self.cfg.d_vision)
+            if shape != want:
+                raise RequestError(f"img_emb shape {shape} != {want} "
+                                   f"(n_img_tokens, d_vision)")
+        elif req.img_emb is not None:
+            raise RequestError(
+                f"img_emb is vlm-only (family is {self.cfg.family!r})")
         if self._paged:
             need = -(-(int(prompt.size) + req.max_new_tokens - 1)
                      // self.page_size)
-            assert need <= self.pool_pages, \
-                f"request needs {need} pages > pool_pages={self.pool_pages}"
+            if need > self.pool_pages:
+                raise RequestError(f"request needs {need} pages > "
+                                   f"pool_pages={self.pool_pages}")
+        return prompt.astype(np.int32)
+
+    def submit(self, req: Request) -> int:
+        prompt = self._validate(req)
+        if self.queue_cap is not None and len(self._queue) >= self.queue_cap:
+            if self.overflow == "reject":
+                self.stats["rejected"] += 1
+                raise QueueFull(
+                    f"admission queue at capacity ({self.queue_cap}); "
+                    f"resubmit later or construct with overflow='block'")
+            # "block" backpressure: serve until a queue slot frees. Any
+            # completions harvested here are buffered and delivered by
+            # the caller's next poll() — nothing is lost.
+            while len(self._queue) >= self.queue_cap:
+                self._done_buf.extend(self._poll_impl(False))
         rid = self._next_rid
         self._next_rid += 1
         self._queue.append((rid, dataclasses.replace(req, prompt=prompt)))
@@ -499,7 +613,8 @@ class Scheduler:
         self._slot_last_tok[slot] = now
         self._prev_out_len[slot] = 1
 
-    def _admit(self, slot: int, rid: int, req: Request) -> None:
+    def _admit(self, slot: int, rid: int, req: Request,
+               poison: float = 0.0) -> None:
         if self._running:   # in-flight slots stall for this whole prefill
             self.stats["max_admit_stall_tokens"] = max(
                 self.stats["max_admit_stall_tokens"], int(req.prompt.size))
@@ -513,12 +628,14 @@ class Scheduler:
             with self._admit_ctx():
                 self._state, self._cache = self._admit_img_jit(
                     self.params, self._state, self._cache, tokens, img, slot,
-                    rkey, req.max_new_tokens, float(req.temperature), eos)
+                    rkey, req.max_new_tokens, float(req.temperature), eos,
+                    poison)
         else:
             with self._admit_ctx():
                 self._state, self._cache = self._admit_jit(
                     self.params, self._state, self._cache, tokens, slot,
-                    rkey, req.max_new_tokens, float(req.temperature), eos)
+                    rkey, req.max_new_tokens, float(req.temperature), eos,
+                    poison)
         jax.block_until_ready(self._state["done"])   # honest prefill_s
         dt = time.time() - t0
         self.stats["prefill_s"] += dt
@@ -537,10 +654,11 @@ class Scheduler:
         fn = self._chunk_jits.get((final, with_img))
         if fn is None:
             if final:
-                def impl(p, st, c, t, slot, pos, nv, rkey, b, tp, e, *img):
+                def impl(p, st, c, t, slot, pos, nv, rkey, b, tp, e, po,
+                         *img):
                     return self._chunk_final_impl(
                         p, st, c, t, slot, pos, nv, rkey, b, tp, e,
-                        img[0] if img else None)
+                        img[0] if img else None, po)
                 fn = jax.jit(impl, donate_argnums=(1, 2),
                              out_shardings=(None if self._mesh is None else
                                             (self._state_sh, self._cache_sh)))
@@ -585,7 +703,8 @@ class Scheduler:
             out["prefix_tree"] = self._ptree.stats()
         return out
 
-    def _retire_slot(self, slot: int, info: _Running) -> None:
+    def _retire_slot(self, slot: int, info: _Running,
+                     ok: bool = True) -> None:
         """Release a completed slot's pages. With the prefix tree, its
         prompt-region FULL pages (immutable from here on — decode only
         ever wrote past the prompt) are offered to the tree first: new
@@ -593,10 +712,12 @@ class Scheduler:
         insertion), runs already cached keep the incumbent page and ours
         is released. Everything else — tail page, decode pages — drops
         its slot reference; pages still pinned by the tree or by other
-        slots survive, the rest return to the free list."""
+        slots survive, the rest return to the free list. A slot retiring
+        with status='error' (`ok=False`) never donates to the tree — its
+        pages are suspect by definition."""
         pages = self._slot_pages.pop(slot)
         taken: set = set()
-        if self._use_tree and info.prompt is not None:
+        if ok and self._use_tree and info.prompt is not None:
             ps = self.page_size
             snaps = self._vs_snaps.get(info.rid, {})
             n_full = info.prompt_len // ps
@@ -611,7 +732,8 @@ class Scheduler:
         self._pager.decref([p for p in pages if p not in taken])
         self._set_page_row(slot, [])
 
-    def _start_admission(self, slot: int, rid: int, req: Request) -> bool:
+    def _start_admission(self, slot: int, rid: int, req: Request,
+                         poison: float = 0.0) -> bool:
         """Reserve `slot` and queue the request's chunked admission.
         Paged: allocate every page the request can reach up front (so
         decode never faults mid-flight), consulting the prefix tree first
@@ -655,7 +777,7 @@ class Scheduler:
                     .set(jnp.asarray(payloads[-1]))
         n_chunks = max(1, -(-(int(req.prompt.size) - start) // c))
         self._admitting.append(_Admission(slot, rid, req, n_chunks,
-                                          start=start))
+                                          start=start, poison=poison))
         return True
 
     def _advance_admission(self) -> None:
@@ -684,7 +806,7 @@ class Scheduler:
                 self._state, self._cache = self._chunk_call(True, with_img)(
                     self.params, self._state, self._cache, tokens, slot, lo,
                     n_valid, rkey, req.max_new_tokens, float(req.temperature),
-                    eos, *img_args)
+                    eos, adm.poison, *img_args)
         else:
             with self._admit_ctx():
                 self._cache = self._chunk_call(False, with_img)(
@@ -735,7 +857,10 @@ class Scheduler:
 
     def _harvest(self) -> list[Completion]:
         """One explicit host transfer of the done/out state; frees and
-        recycles every completed slot."""
+        recycles every completed slot. A slot whose in-jit err flag is
+        set (non-finite logits) retires with status='error' — empty
+        tokens (whatever it sampled after the poison is garbage) and its
+        pages are never donated to the prefix tree."""
         if not self._running:
             return []
         done = jax.device_get(self._state["done"])
@@ -743,16 +868,22 @@ class Scheduler:
             return []
         out_len = jax.device_get(self._state["out_len"])
         outs = jax.device_get(self._state["outs"])
+        errf = jax.device_get(self._state["err"])
         slots = [int(s) for s in np.nonzero(done)[0] if int(s) in self._running]
         completed = []
         now = time.time()
         for slot in sorted(slots, key=lambda s: self._running[s].rid):
             info = self._running.pop(slot)
-            toks = outs[slot, :int(out_len[slot])].astype(np.int32)
-            self.stats["tokens_out"] += int(toks.size)
-            self.stats["completed"] += 1
+            bad = bool(errf[slot])
+            toks = (np.zeros((0,), np.int32) if bad else
+                    outs[slot, :int(out_len[slot])].astype(np.int32))
+            if bad:
+                self.stats["errors"] += 1
+            else:
+                self.stats["tokens_out"] += int(toks.size)
+                self.stats["completed"] += 1
             if self._paged:
-                self._retire_slot(slot, info)
+                self._retire_slot(slot, info, ok=not bad)
             self._free.append(slot)
             self._slot_last_tok.pop(slot, None)
             completed.append(Completion(
@@ -760,11 +891,133 @@ class Scheduler:
                 ttft=self._ttft.pop(info.rid, 0.0),
                 ttft_wall=self._ttft_wall.pop(info.rid, 0.0),
                 cached_tokens=self._cached_tokens.pop(info.rid, 0),
-                itl=np.asarray(self._itl.pop(info.rid, []))))
+                itl=np.asarray(self._itl.pop(info.rid, [])),
+                status="error" if bad else "completed",
+                error="non-finite logits" if bad else None))
         idx = jnp.asarray(slots, jnp.int32)
         self._state = dict(self._state,
-                           done=self._state["done"].at[idx].set(False))
+                           done=self._state["done"].at[idx].set(False),
+                           err=self._state["err"].at[idx].set(False))
         return completed
+
+    def _plan_tick(self, site: str):
+        """Consult the fault plan at a hook point (no-op without one)."""
+        return self._faults.tick(site) if self._faults is not None else []
+
+    def _pop_next(self) -> tuple[int, Request]:
+        """Next request to admit: highest priority first, FIFO (lowest
+        rid) within a priority level. The all-default-priority case stays
+        the plain O(1) popleft."""
+        q = self._queue
+        if len(q) > 1 and any(r.priority != q[0][1].priority for _, r in q):
+            i = max(range(len(q)), key=lambda j: (q[j][1].priority, -q[j][0]))
+            rid_req = q[i]
+            del q[i]
+            return rid_req
+        return q.popleft()
+
+    def _resolve(self, rid: int, status: str,
+                 error: str | None = None) -> Completion:
+        """Terminal no-token completion for a request that never reached
+        a slot: shed (deadline) or error (poison / unsatisfiable pages).
+        Accounts the rid exactly once, like a harvested completion."""
+        self.stats["shed" if status == "shed" else "errors"] += 1
+        return Completion(rid, np.zeros((0,), np.int32),
+                          time.time() - self._submit_time.pop(rid),
+                          status=status, error=error)
+
+    def _run_burst(self, dr: bool, bounded: int) -> None:
+        """One decode burst with fault consultation and transient-error
+        retry. The 'burst' site ticks once per ATTEMPT (a retried burst
+        consumes further occurrences, so `device_error@burst:i*n` models
+        an n-attempt error burst); an injected fault fires BEFORE the jit
+        call, so state/cache are untouched and the retried burst is
+        bit-identical to an unfaulted one. Injected stalls ('slow') and
+        backoff sleeps land in decode_s — they are exactly the wall time
+        a goodput benchmark must see."""
+        t0 = time.time()
+        for attempt in range(self.burst_retries + 1):
+            try:
+                for f in self._plan_tick("burst"):
+                    if f.kind == "slow":
+                        time.sleep(f.param)       # straggler simulation
+                    elif f.kind == "device_error":
+                        raise TransientDeviceError(
+                            f"injected device error "
+                            f"(burst attempt {attempt})")
+                if self._mesh is None:
+                    self._state, self._cache = self._burst(
+                        self.params, self._state, self._cache, dr, bounded)
+                else:
+                    self._state, self._cache = \
+                        self._sharded_burst(dr, bounded)(
+                            self.params, self._state, self._cache)
+                jax.block_until_ready(self._state["done"])
+                break
+            except TransientDeviceError:
+                self.stats["burst_retries"] += 1
+                if attempt == self.burst_retries:
+                    raise
+                time.sleep(self.backoff_s * (2 ** attempt))
+        self.stats["decode_s"] += time.time() - t0
+        self.stats["bursts"] += 1
+        self._note_burst_tokens(t0)
+
+    def audit(self) -> list[str]:
+        """Cross-layer invariant audit (violation strings; empty ==
+        consistent): page-pool internals (`PagePool.audit`), prefix-tree
+        structure (`PrefixCache.audit`), and the refcount ledger — every
+        pool page's refcount must equal the references actually held by
+        slot page tables plus prefix-tree nodes. Unpaged schedulers have
+        nothing to audit."""
+        if not self._paged:
+            return []
+        out = self._pager.audit()
+        tree_pages: list[int] = []
+        if self._use_tree:
+            out += self._ptree.audit()
+            tree_pages = self._ptree.pages()
+        if out:
+            # structurally corrupt (e.g. a tree node holding a freed or
+            # out-of-range page): the ledger below would only re-report it
+            return out
+        expect = np.zeros((self.pool_pages,), np.int64)
+        for pages in self._slot_pages.values():
+            for p in pages:
+                expect[p] += 1
+        for p in tree_pages:
+            expect[p] += 1
+        return [f"page {int(p)}: pool refcount "
+                f"{int(self._pager.refs[p])} != {int(expect[p])} "
+                f"references held (slot tables + prefix tree)"
+                for p in np.nonzero(expect != self._pager.refs)[0]]
+
+    def _watchdog(self) -> None:
+        """Invariant watchdog, run at burst boundaries when enabled
+        (REPRO_CHECK_INVARIANTS=1 / check_invariants=True). On violation
+        it degrades rather than crashes: the prefix tree is dropped
+        (cache-bypass — slots hold their own page references, so
+        in-flight requests and future uncached admissions are unaffected)
+        and serving continues; only corruption that survives degradation
+        (the pool ledger itself) raises InvariantViolation. The 'audit'
+        fault-plan site ticks here — kind 'corrupt' deliberately corrupts
+        the tree first, which is how the degradation path is tested."""
+        if not (self._check_inv and self._paged):
+            return
+        for f in self._plan_tick("audit"):
+            if f.kind == "corrupt" and self._use_tree:
+                self._ptree.corrupt()
+        violations = self.audit()
+        if not violations:
+            return
+        self.stats["invariant_violations"] += 1
+        self.last_violations = violations
+        if self._use_tree:
+            self._ptree.clear()
+            self._use_tree = False
+            if not self.audit():
+                return                   # degraded cleanly: tree bypassed
+        raise InvariantViolation("\n".join(violations))
 
     def poll(self, drain: bool = False) -> list[Completion]:
         """One scheduling round: admit into free slots (whole-prompt, or
@@ -775,48 +1028,71 @@ class Scheduler:
         when new requests may still arrive (streaming): the burst then
         yields at every completion so a freed slot can admit them; `run()`
         passes drain=True for the tail, where nothing can arrive mid-call
-        and one burst finishes every slot."""
+        and one burst finishes every slot.
+
+        Every submitted rid resolves to exactly one completion across the
+        polls that serve it: status 'completed', 'shed' (TTFT deadline
+        passed while queued — shed before any prefill compute), or
+        'error' (poisoned / unsatisfiable). Completions buffered by a
+        blocking submit are delivered first."""
+        out, self._done_buf = self._done_buf, []
+        return out + self._poll_impl(drain)
+
+    def _poll_impl(self, drain: bool) -> list[Completion]:
+        completed: list[Completion] = []
         while self._queue and self._free:
-            rid, req = self._queue.popleft()
+            rid, req = self._pop_next()
+            if req.deadline_s is not None and \
+                    time.time() - self._submit_time[rid] > req.deadline_s:
+                # deadline-based load shedding: the TTFT deadline already
+                # passed, so prefill compute would be wasted — shed now
+                completed.append(self._resolve(rid, "shed"))
+                continue
             slot = self._free.pop(0)
+            poison, injected = 0.0, False
+            for f in self._plan_tick("admit"):
+                if f.kind == "nan":
+                    poison = float("nan")
+                elif f.kind == "poison":
+                    injected = True
+            if injected:
+                self._free.insert(0, slot)
+                completed.append(self._resolve(
+                    rid, "error", "injected poison fault at admission"))
+                continue
             if self.prefill_chunk:
-                if not self._start_admission(slot, rid, req):
+                if not self._start_admission(slot, rid, req, poison):
+                    self._free.insert(0, slot)
+                    if not self._running and not self._admitting:
+                        # nothing in flight can ever retire pages for this
+                        # request: it is unsatisfiable — error it alone
+                        # instead of wedging the whole scheduler
+                        completed.append(self._resolve(
+                            rid, "error",
+                            "page pool exhausted with nothing in flight"))
+                        continue
                     # page pool exhausted even after eviction: requeue and
                     # wait for in-flight requests to retire their pages
                     self._queue.appendleft((rid, req))
-                    self._free.insert(0, slot)
-                    if not self._running and not self._admitting:
-                        raise RuntimeError(
-                            "page pool exhausted with nothing in flight — "
-                            "pool_pages too small for a single request")
                     break
             else:
-                self._admit(slot, rid, req)
+                self._admit(slot, rid, req, poison)
         if self._admitting:
             self._advance_admission()
-        completed = self._harvest()
+        completed += self._harvest()
         if not completed and self._running:
             bounded = self.interleave_steps if self._admitting else 0
-            t0 = time.time()
             dr = drain and not self._queue and not self._admitting
-            if self._mesh is None:
-                self._state, self._cache = self._burst(
-                    self.params, self._state, self._cache, dr, bounded)
-            else:
-                self._state, self._cache = self._sharded_burst(dr, bounded)(
-                    self.params, self._state, self._cache)
-            jax.block_until_ready(self._state["done"])
-            self.stats["decode_s"] += time.time() - t0
-            self.stats["bursts"] += 1
-            self._note_burst_tokens(t0)
-            completed = self._harvest()
+            self._run_burst(dr, bounded)
+            self._watchdog()
+            completed += self._harvest()
         return completed
 
     def run(self) -> dict[int, Completion]:
         """Poll until every submitted request has completed; return the
         completions collected along the way."""
         out: dict[int, Completion] = {}
-        while not self.idle:
+        while not self.idle or self._done_buf:
             for c in self.poll(drain=True):
                 out[c.rid] = c
         return out

@@ -1,8 +1,16 @@
+import os
+
 import numpy as np
 import pytest
 
 # NOTE: no XLA_FLAGS here on purpose — tests run on the single real CPU
 # device; only the dry-run process forces 512 host devices.
+
+# The serving invariant watchdog (pool/prefix-tree/refcount audit at
+# burst boundaries) is opt-in for production (REPRO_CHECK_INVARIANTS=1)
+# but ALWAYS on under tests: any paged test that corrupts bookkeeping
+# fails at the burst that corrupted it, not at teardown.
+os.environ.setdefault("REPRO_CHECK_INVARIANTS", "1")
 
 
 @pytest.fixture

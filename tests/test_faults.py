@@ -1,0 +1,446 @@
+"""Fault-tolerant serving: typed submit-time validation, bounded-queue
+backpressure, deadline shedding, per-request poison isolation,
+transient-error retry, pool exhaustion, watchdog degradation, and
+replica-death failover — every fault class injected deterministically
+(serving.faults) and every surviving request's tokens bit-identical to
+the fault-free run. Run with `-m faults` for the dedicated CI job."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.smoke import smoke_config
+from repro.models.api import get_model
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.faults import (Fault, FaultPlan, InvariantViolation,
+                                  QueueFull, ReplicaDead, RequestError,
+                                  TransientDeviceError, parse_plan)
+from repro.serving.scheduler import Scheduler
+
+pytestmark = pytest.mark.faults
+
+ARCH = "qwen2-72b"
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_config(ARCH)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _requests(cfg, seed, lens_budgets, **kw):
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=rng.integers(0, cfg.vocab, p, dtype=np.int32),
+                    max_new_tokens=m, **kw) for p, m in lens_budgets]
+
+
+TRAFFIC = [(5, 4), (11, 3), (3, 5), (8, 2)]
+
+
+def _sched(cfg, model, params, plan=None, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", 24)
+    kw.setdefault("prefill_chunk", 4)
+    kw.setdefault("interleave_steps", 2)
+    kw.setdefault("page_size", 4)
+    return Scheduler(cfg, model, params, fault_plan=plan,
+                     backoff_s=0.001, **kw)
+
+
+@pytest.fixture(scope="module")
+def baseline(setup):
+    """Fault-free completions for TRAFFIC — the bit-identity reference."""
+    cfg, model, params = setup
+    s = _sched(cfg, model, params)
+    rids = [s.submit(r) for r in _requests(cfg, 0, TRAFFIC)]
+    comps = s.run()
+    return {i: comps[r].tokens for i, r in enumerate(rids)}
+
+
+# -- the plan itself ---------------------------------------------------------
+def test_fault_plan_tick_windows():
+    plan = FaultPlan([Fault("device_error", "burst", 2, times=3),
+                      Fault("slow", "burst", 3, param=0.5)])
+    kinds = [sorted(f.kind for f in plan.tick("burst")) for _ in range(7)]
+    assert kinds == [[], [], ["device_error"], ["device_error", "slow"],
+                     ["device_error"], [], []]
+    assert plan.occurrences("burst") == 7
+    assert plan.occurrences("alloc") == 0
+    assert [(s, i, k) for s, i, k in plan.fired] == [
+        ("burst", 2, "device_error"), ("burst", 3, "device_error"),
+        ("burst", 3, "slow"), ("burst", 4, "device_error")]
+
+
+def test_parse_plan_roundtrip_and_errors():
+    plan = parse_plan("device_error@burst:2*3, slow@burst:6:0.05,"
+                      "death@replica0:1")
+    assert [(f.kind, f.site, f.index, f.times, f.param)
+            for f in plan.faults] == [
+        ("device_error", "burst", 2, 3, 0.0),
+        ("slow", "burst", 6, 1, 0.05), ("death", "replica0", 1, 1, 0.0)]
+    for bad in ("nonsense", "kind@site", "kind@site:x", "a@b:1:2:3"):
+        with pytest.raises(ValueError):
+            parse_plan(bad)
+
+
+def test_random_plan_is_replayable():
+    a = FaultPlan.random(7, {"burst": 0.3, "alloc": 0.1}, horizon=32)
+    b = FaultPlan.random(7, {"burst": 0.3, "alloc": 0.1}, horizon=32)
+    assert [(f.kind, f.site, f.index) for f in a.faults] == \
+           [(f.kind, f.site, f.index) for f in b.faults]
+    assert any(f.site == "burst" for f in a.faults)
+
+
+# -- submit-time validation --------------------------------------------------
+@pytest.mark.parametrize("req,match", [
+    (Request(prompt=np.zeros((0,), np.int32)), "non-empty"),
+    (Request(prompt=np.zeros((2, 3), np.int32)), "1-D"),
+    (Request(prompt=np.zeros((3,), np.float32)), "integer token ids"),
+    (Request(prompt=np.full((3,), -1, np.int32)), "lie in"),
+    (Request(prompt=np.zeros((30,), np.int32)), "exceeds max_len"),
+    (Request(prompt=np.zeros((3,), np.int32), max_new_tokens=0),
+     "max_new_tokens"),
+    (Request(prompt=np.zeros((3,), np.int32), deadline_s=-1.0),
+     "deadline_s"),
+    (Request(prompt=np.zeros((3,), np.int32),
+             img_emb=np.zeros((2, 2), np.float32)), "vlm-only"),
+])
+def test_submit_rejects_malformed(setup, req, match):
+    cfg, model, params = setup
+    s = _sched(cfg, model, params)
+    with pytest.raises(RequestError, match=match):
+        s.submit(req)
+    assert s.idle                       # nothing half-admitted
+
+
+def test_submit_rejects_bad_img_emb():
+    cfg = smoke_config("llama-3.2-vision-11b")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    s = Scheduler(cfg, model, params, n_slots=2, max_len=24)
+    with pytest.raises(RequestError, match="img_emb"):
+        s.submit(Request(prompt=np.zeros((3,), np.int32)))
+    with pytest.raises(RequestError, match="img_emb shape"):
+        s.submit(Request(prompt=np.zeros((3,), np.int32),
+                         img_emb=np.zeros((1, 1), np.float32)))
+
+
+def test_request_error_is_a_value_error(setup):
+    cfg, model, params = setup
+    s = _sched(cfg, model, params)
+    with pytest.raises(ValueError):     # callers catching ValueError work
+        s.submit(Request(prompt=np.zeros((0,), np.int32)))
+
+
+# -- backpressure and shedding -----------------------------------------------
+def test_queue_cap_reject(setup, baseline):
+    cfg, model, params = setup
+    s = _sched(cfg, model, params, queue_cap=2, overflow="reject")
+    reqs = _requests(cfg, 0, TRAFFIC)
+    rids = [s.submit(r) for r in reqs[:2]]
+    with pytest.raises(QueueFull):
+        s.submit(reqs[2])
+    assert s.stats["rejected"] == 1
+    comps = s.run()                     # admitted requests unaffected
+    for i, r in enumerate(rids):
+        np.testing.assert_array_equal(comps[r].tokens, baseline[i])
+
+
+def test_queue_cap_block_loses_nothing(setup, baseline):
+    """'block' backpressure serves the queue down inside submit; the
+    completions harvested there are buffered, not dropped."""
+    cfg, model, params = setup
+    s = _sched(cfg, model, params, queue_cap=2, overflow="block")
+    rids = [s.submit(r) for r in _requests(cfg, 0, TRAFFIC)]
+    comps = s.run()
+    assert sorted(comps) == sorted(rids)
+    for i, r in enumerate(rids):
+        np.testing.assert_array_equal(comps[r].tokens, baseline[i])
+
+
+def test_deadline_shed_before_prefill(setup, baseline):
+    """An expired TTFT deadline sheds the request before any prefill
+    compute; everything else completes bit-identically."""
+    cfg, model, params = setup
+    reqs = _requests(cfg, 0, TRAFFIC)
+    reqs[1] = dataclasses.replace(reqs[1], deadline_s=0.0)
+    s = _sched(cfg, model, params)
+    prefill0 = s.stats["prefill_tokens"]
+    rids = [s.submit(r) for r in reqs]
+    comps = s.run()
+    assert comps[rids[1]].status == "shed"
+    assert comps[rids[1]].tokens.size == 0
+    assert s.stats["shed"] == 1
+    # the shed request's prompt never touched the prefill path
+    others = sum(len(r.prompt) for i, r in enumerate(reqs) if i != 1)
+    assert s.stats["prefill_tokens"] - prefill0 <= others + 3 * 4  # pad only
+    for i, r in enumerate(rids):
+        if i != 1:
+            np.testing.assert_array_equal(comps[r].tokens, baseline[i])
+
+
+def test_priority_admits_first(setup):
+    """With one slot, the high-priority request admits ahead of earlier-
+    submitted default-priority ones."""
+    cfg, model, params = setup
+    s = _sched(cfg, model, params, n_slots=1)
+    reqs = _requests(cfg, 0, TRAFFIC[:3])
+    reqs[2] = dataclasses.replace(reqs[2], priority=5)
+    rids = [s.submit(r) for r in reqs]
+    first = None
+    while first is None:
+        done = s.poll()
+        if done:
+            first = done[0].rid
+    assert first == rids[2]
+    s.run()
+
+
+# -- fault classes, each bit-identical for survivors -------------------------
+def test_transient_burst_error_retried_bit_identical(setup, baseline):
+    plan = FaultPlan([Fault("device_error", "burst", 1, times=2),
+                      Fault("slow", "burst", 4, param=0.005)])
+    cfg, model, params = setup
+    s = _sched(cfg, model, params, plan)
+    rids = [s.submit(r) for r in _requests(cfg, 0, TRAFFIC)]
+    comps = s.run()
+    assert s.stats["burst_retries"] == 2
+    assert all(comps[r].status == "completed" for r in rids)
+    for i, r in enumerate(rids):
+        np.testing.assert_array_equal(comps[r].tokens, baseline[i])
+
+
+def test_burst_retries_exhausted_raises(setup):
+    plan = FaultPlan([Fault("device_error", "burst", 0, times=99)])
+    cfg, model, params = setup
+    s = _sched(cfg, model, params, plan, burst_retries=2)
+    s.submit(_requests(cfg, 0, TRAFFIC[:1])[0])
+    with pytest.raises(TransientDeviceError):
+        s.run()
+    assert s.stats["burst_retries"] == 3        # 1 + burst_retries attempts
+
+
+def test_nan_poison_isolated_to_one_request(setup, baseline):
+    """A NaN-poisoned admission retires alone with status='error' and
+    empty tokens; every co-resident slot decodes bit-identically."""
+    plan = FaultPlan([Fault("nan", "admit", 1)])
+    cfg, model, params = setup
+    s = _sched(cfg, model, params, plan)
+    rids = [s.submit(r) for r in _requests(cfg, 0, TRAFFIC)]
+    comps = s.run()
+    statuses = [comps[r].status for r in rids]
+    assert statuses.count("error") == 1 and s.stats["errors"] == 1
+    bad = statuses.index("error")
+    assert comps[rids[bad]].error == "non-finite logits"
+    assert comps[rids[bad]].tokens.size == 0
+    for i, r in enumerate(rids):
+        if i != bad:
+            np.testing.assert_array_equal(comps[r].tokens, baseline[i])
+    s._pager.check()
+    assert s._pager.allocated == 0
+
+
+def test_injected_poison_errors_before_admission(setup, baseline):
+    plan = FaultPlan([Fault("poison", "admit", 0)])
+    cfg, model, params = setup
+    s = _sched(cfg, model, params, plan)
+    rids = [s.submit(r) for r in _requests(cfg, 0, TRAFFIC)]
+    comps = s.run()
+    sts = [comps[r].status for r in rids]
+    assert sts.count("error") == 1
+    for i, r in enumerate(rids):
+        if comps[r].status == "completed":
+            np.testing.assert_array_equal(comps[r].tokens, baseline[i])
+
+
+def test_pool_exhaustion_requeues_and_recovers(setup, baseline):
+    """A transient alloc failure (evict-retry also exhausted) requeues
+    the admission; it completes bit-identically once pages free up."""
+    plan = FaultPlan([Fault("exhaust", "alloc", 1, times=2)])
+    cfg, model, params = setup
+    s = _sched(cfg, model, params, plan)
+    rids = [s.submit(r) for r in _requests(cfg, 0, TRAFFIC)]
+    comps = s.run()
+    assert all(comps[r].status == "completed" for r in rids)
+    for i, r in enumerate(rids):
+        np.testing.assert_array_equal(comps[r].tokens, baseline[i])
+    s._pager.check()
+
+
+def test_pool_exhausted_nothing_in_flight_errors_not_wedges(setup):
+    """Persistent exhaustion with zero requests in flight must error the
+    request (it can never be satisfied) instead of wedging the loop."""
+    plan = FaultPlan([Fault("exhaust", "alloc", 0, times=999)])
+    cfg, model, params = setup
+    s = _sched(cfg, model, params, plan)
+    rids = [s.submit(r) for r in _requests(cfg, 0, TRAFFIC[:2])]
+    comps = s.run()
+    assert all(comps[r].status == "error" for r in rids)
+    assert all("exhausted" in comps[r].error for r in rids)
+    assert s.idle
+
+
+def test_corruption_degrades_to_cache_bypass(setup, baseline):
+    """An injected prefix-tree corruption trips the watchdog, which drops
+    the tree (cache bypass) and keeps serving — outputs bit-identical,
+    pool invariants intact, no crash."""
+    plan = FaultPlan([Fault("corrupt", "audit", 1)])
+    cfg, model, params = setup
+    s = _sched(cfg, model, params, plan, prefix_cache=True)
+    assert s._use_tree
+    rids = [s.submit(r) for r in _requests(cfg, 0, TRAFFIC)]
+    comps = s.run()
+    assert s.stats["invariant_violations"] == 1
+    assert not s._use_tree
+    assert s.last_violations
+    assert all(comps[r].status == "completed" for r in rids)
+    for i, r in enumerate(rids):
+        np.testing.assert_array_equal(comps[r].tokens, baseline[i])
+    assert s.audit() == []
+    s._pager.check()
+
+
+def test_pool_corruption_survives_degradation_raises(setup):
+    """Corruption in the pool ledger itself (not the tree) cannot be
+    degraded around: the watchdog raises InvariantViolation."""
+    cfg, model, params = setup
+    s = _sched(cfg, model, params, prefix_cache=True)
+    s.submit(_requests(cfg, 0, [(5, 6)])[0])
+    s.poll()                             # get a burst in flight
+    s._pager.refs[0] = -1                # simulated double-free
+    with pytest.raises(InvariantViolation, match="negative refcounts"):
+        s.run()
+
+
+def test_audit_catches_each_violation_kind(setup):
+    from repro.serving.pager import PagePool
+    from repro.serving.prefix_cache import PrefixCache
+    pool = PagePool(4)
+    pages = pool.alloc(2)
+    assert pool.audit() == []
+    pool.refs[pages[0]] = 0              # refcount says free, list disagrees
+    assert any("free=False" in v for v in pool.audit())
+    pool.refs[pages[0]] = 1
+    pool._free.append(pool._free[0])
+    assert any("duplicates" in v for v in pool.audit())
+
+    pool = PagePool(4)
+    tree = PrefixCache(pool, page_size=2)
+    got = pool.alloc(1)
+    tree.insert([1, 2], got, [None])
+    assert tree.audit() == []
+    tree.corrupt()
+    assert tree.audit()
+    freed = tree.clear()                 # defensive: skips the corrupt node
+    assert freed == 1 and pool.audit() == []
+
+
+# -- drain under pressure (satellite) ----------------------------------------
+def test_drain_under_pressure_accounts_every_rid(setup):
+    """poll(drain=True) with a pool sized to force eviction/requeue
+    pressure, slots mid-admission, an injected burst fault, expired
+    deadlines, and a poisoned admission: every submitted rid resolves to
+    exactly one of completed/shed/error and the pool closes clean."""
+    plan = FaultPlan([Fault("device_error", "burst", 1),
+                      Fault("nan", "admit", 3),
+                      Fault("exhaust", "alloc", 2, times=2)])
+    cfg, model, params = setup
+    s = _sched(cfg, model, params, plan, pool_pages=12, prefix_cache=True)
+    reqs = _requests(cfg, 0, [(5, 4), (11, 3), (3, 5), (8, 2), (13, 4),
+                              (6, 3), (9, 2)])
+    reqs[2] = dataclasses.replace(reqs[2], deadline_s=0.0)
+    reqs[5] = dataclasses.replace(reqs[5], deadline_s=0.0)
+    rids = [s.submit(r) for r in reqs]
+    seen: dict[int, str] = {}
+    while not s.idle:
+        for c in s.poll(drain=True):     # drain mid-stream, under pressure
+            assert c.rid not in seen, f"rid {c.rid} resolved twice"
+            seen[c.rid] = c.status
+    assert sorted(seen) == sorted(rids)  # exactly once each
+    counts = {st: list(seen.values()).count(st) for st in set(seen.values())}
+    assert counts.get("shed", 0) == 2
+    assert counts.get("error", 0) == 1
+    assert counts["completed"] == len(reqs) - 3
+    s._pager.check()
+    assert s._pager.allocated == 0 or s._use_tree
+    assert s.audit() == []
+
+
+# -- engine plumbing ---------------------------------------------------------
+def test_engine_serve_surfaces_statuses(setup):
+    cfg, model, params = setup
+    plan = FaultPlan([Fault("nan", "admit", 0)])
+    eng = ServingEngine(cfg, params, max_len=24, slots=2, prefill_chunk=4,
+                        fault_plan=plan)
+    reqs = _requests(cfg, 0, TRAFFIC[:2])
+    comps = eng.serve(reqs)
+    assert [c.status for c in comps] == ["error", "completed"]
+    assert comps[0].tokens.size == 0     # error rows carry no tokens
+    toks = eng.generate(reqs)            # plan spent: a clean rerun serves
+    assert all(t.size > 0 for t in toks)
+
+
+# -- replica failover --------------------------------------------------------
+_multi = pytest.mark.skipif(len(jax.devices()) < 2,
+                            reason="needs >= 2 devices (XLA_FLAGS="
+                            "--xla_force_host_platform_device_count=8)")
+
+
+@_multi
+@pytest.mark.multidevice
+def test_replica_death_fails_over_bit_identical(setup):
+    """Kill replica 0 mid-batch: its unfinished requests fail over to the
+    survivor and every token matches a single-engine fault-free run."""
+    cfg, model, params = setup
+    reqs = _requests(cfg, 0, TRAFFIC + [(6, 3)])
+    eng = ServingEngine(cfg, params, max_len=24, slots=2, prefill_chunk=4)
+    ref = eng.generate(reqs)
+    from repro.serving.replica import ReplicaServer
+    plan = FaultPlan([Fault("death", "replica0", 1)])
+    srv = ReplicaServer(cfg, params, devices=jax.devices()[:2],
+                        fault_plan=plan, backoff_s=0.001,
+                        max_len=24, slots=2, prefill_chunk=4)
+    out = srv.generate(reqs)
+    assert srv.health == [False, True]
+    assert srv.failovers == 1
+    assert 0 in srv.last_errors
+    for a, b in zip(ref, out):
+        np.testing.assert_array_equal(a, b)
+    st = srv.stats()
+    assert st["healthy"] == 1 and st["failovers"] == 1
+    assert st["per_replica"][0]["healthy"] is False
+
+
+@_multi
+@pytest.mark.multidevice
+def test_all_replicas_dead_raises_with_partial(setup):
+    cfg, model, params = setup
+    from repro.serving.replica import ReplicaServer
+    plan = FaultPlan([Fault("death", "replica0", 0, times=99),
+                      Fault("death", "replica1", 1, times=99)])
+    srv = ReplicaServer(cfg, params, devices=jax.devices()[:2],
+                        fault_plan=plan, backoff_s=0.001,
+                        max_len=24, slots=2, prefill_chunk=4)
+    with pytest.raises(ReplicaDead) as ei:
+        srv.generate(_requests(cfg, 0, TRAFFIC))
+    assert srv.health == [False, False]
+    assert isinstance(ei.value.partial, dict)
+
+
+@_multi
+@pytest.mark.multidevice
+def test_replica_worker_exception_propagates(setup):
+    """A non-failover worker exception (here a validation error) must
+    reach the caller, never be swallowed into a partial result."""
+    cfg, model, params = setup
+    from repro.serving.replica import ReplicaServer
+    srv = ReplicaServer(cfg, params, devices=jax.devices()[:2],
+                        max_len=24, slots=2, prefill_chunk=4)
+    bad = [Request(prompt=np.zeros((3,), np.int32)),
+           Request(prompt=np.zeros((0,), np.int32))]
+    with pytest.raises(RequestError):
+        srv.generate(bad)
+    assert srv.health == [True, True]    # a bug is not a death

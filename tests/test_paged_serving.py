@@ -133,12 +133,13 @@ def test_prefix_cache_eviction_under_pool_pressure():
 
 
 def test_page_pool_too_small_for_one_request_raises():
+    from repro.serving.faults import RequestError
     cfg, model, params = _setup("musicgen-large")
     sched = Scheduler(cfg, model, params, n_slots=2, max_len=16,
                       prefill_chunk=4, page_size=4, pool_pages=2)
-    with pytest.raises(AssertionError):
+    with pytest.raises(RequestError):
         sched.submit(Request(prompt=np.arange(10, dtype=np.int32),
-                             max_new_tokens=8))
+                             max_new_tokens=5))
 
 
 def test_engine_reports_page_pool_utilization():
